@@ -1,0 +1,48 @@
+"""Ablation of the beyond-paper refinements (DESIGN.md §4b): each switch
+reverted individually back toward the paper-faithful configuration, on
+DLRM-50 (4) held-out tasks.  The 'paper_faithful' row is all four reverted
+(head reward, linear-scaled targets, argmax inference, log-dim features)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.trainer import DreamShardConfig
+
+
+def run():
+    n_tasks, base = C.budget()
+    pool = C.get_pool("DLRM")
+    sim = C.get_sim("DLRM")
+    train, test = C.make_benchmark_suite(pool, 50, 4, n_tasks=n_tasks)
+    lookup = C.eval_all_baselines(sim, test)["lookup"]
+
+    variants = {
+        "full (default)": {},
+        "reward_mode=head": {"reward_mode": "head"},
+        "target=scale": {"target_transform": "scale"},
+        "argmax inference": {"inference_candidates": 1},
+        "paper_faithful": {"reward_mode": "head",
+                           "target_transform": "scale",
+                           "inference_candidates": 1},
+    }
+    rows = []
+    for name, overrides in variants.items():
+        cfg = dataclasses.replace(base, **overrides)
+        ds = C.train_dreamshard(train, sim, cfg)
+        cost = C.eval_strategy(
+            sim, test, lambda t: ds.place(t.raw_features, t.n_devices))
+        rows.append({"variant": name, "test_cost_ms": round(cost, 2),
+                     "vs_lookup_expert": C.speedup(lookup, cost)})
+        print(rows[-1], flush=True)
+    rows.append({"variant": "lookup_expert_baseline",
+                 "test_cost_ms": round(lookup, 2)})
+    print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

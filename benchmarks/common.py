@@ -1,0 +1,89 @@
+"""Shared benchmark plumbing: strategy evaluation over task suites,
+DreamShard training at benchmark budgets, CSV row helpers."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import baselines as B                      # noqa: E402
+from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig   # noqa: E402
+from repro.core.trainer import DreamShard, DreamShardConfig    # noqa: E402
+from repro.data.synthetic import make_dlrm_pool, make_prod_pool  # noqa: E402
+from repro.data.tasks import make_benchmark_suite          # noqa: E402
+from repro.sim.costsim import CostSimulator                # noqa: E402
+from repro.sim.hardware import PAPER_GPU, PAPER_GPU_LARGE  # noqa: E402
+
+FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
+
+
+def budget():
+    """(n_tasks, trainer_config) for quick vs full benchmark runs.
+
+    Quick mode keeps the paper's exact Algorithm-1 hyperparameters and only
+    reduces the number of sampled tasks per suite (50 -> 16)."""
+    if FULL:
+        return 50, DreamShardConfig()
+    return 16, DreamShardConfig()
+
+
+def get_pool(dataset: str):
+    return make_dlrm_pool(seed=0) if dataset == "DLRM" else make_prod_pool(seed=1)
+
+
+def get_sim(dataset: str, **kw):
+    spec = PAPER_GPU if dataset == "DLRM" else PAPER_GPU_LARGE
+    return CostSimulator(spec, **kw)
+
+
+def eval_strategy(sim, tasks, place_fn) -> float:
+    return float(np.mean([
+        sim.evaluate(t.raw_features, place_fn(t), t.n_devices).overall
+        for t in tasks]))
+
+
+def eval_all_baselines(sim, tasks, seed=0) -> dict:
+    rng = np.random.default_rng(seed)
+    out = {"random": eval_strategy(
+        sim, tasks, lambda t: B.random_place(
+            t.raw_features, t.n_devices, sim.spec.mem_capacity_gb, rng))}
+    for s in B.EXPERT_STRATEGIES:
+        out[s] = eval_strategy(
+            sim, tasks, lambda t, s=s: B.expert_place(
+                t.raw_features, t.n_devices, sim.spec.mem_capacity_gb, s))
+    return out
+
+
+def train_dreamshard(train_tasks, sim, cfg=None) -> DreamShard:
+    ds = DreamShard(train_tasks, sim, cfg or budget()[1])
+    ds.train()
+    return ds
+
+
+def train_rnn(train_tasks, sim, n_updates=None) -> RNNPlacer:
+    if n_updates is None:
+        # match DreamShard's hardware budget (n_iterations * n_collect)
+        c = budget()[1]
+        n_updates = max(1, c.n_iterations * c.n_collect // 2)
+    placer = RNNPlacer(train_tasks, sim,
+                       RNNPolicyConfig(n_updates=n_updates, n_episode=10))
+    placer.train()
+    return placer
+
+
+def speedup(base: float, val: float) -> str:
+    return f"{(base / val - 1) * 100:+.1f}%"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

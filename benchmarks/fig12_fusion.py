@@ -1,0 +1,44 @@
+"""Paper Fig 12 (App. A.3.2): fused multi-table cost vs sum of
+single-table costs -- speedup distribution and the failure of a linear
+correction (motivates the learned cost network)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run():
+    pool = C.get_pool("DLRM")
+    sim = C.get_sim("DLRM", noise_std=0.0)
+    rng = np.random.default_rng(0)
+    n_samples = 200 if C.FULL else 50
+    fused, singles = [], []
+    for _ in range(n_samples):
+        sub = pool[rng.choice(len(pool), 10, replace=False)]
+        f, _ = sim.fused_op_ms(sub)
+        fused.append(f)
+        singles.append(float(sim.single_table_ms(sub).sum()))
+    fused, singles = np.array(fused), np.array(singles)
+    speedups = singles / fused
+    # best single linear coefficient (paper grid-searches [1.0, 2.0])
+    best_mse = min(
+        float(np.mean((singles / c - fused) ** 2))
+        for c in np.arange(1.0, 2.5, 0.001))
+    rows = [{
+        "n_samples": n_samples,
+        "speedup_min": round(float(speedups.min()), 3),
+        "speedup_mean": round(float(speedups.mean()), 3),
+        "speedup_max": round(float(speedups.max()), 3),
+        "in_paper_band_1x_3x": bool((speedups >= 1).all()
+                                    and (speedups <= 3.2).all()),
+        "linear_fit_mse": round(best_mse, 3),
+        "correlation": round(float(np.corrcoef(fused, singles)[0, 1]), 4),
+    }]
+    print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Table 2 (+8-10): zero-shot transfer of a trained DreamShard to
+tasks with different numbers of tables and/or devices, no fine-tuning."""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def run():
+    n_tasks, _ = C.budget()
+    pool = C.get_pool("DLRM")
+    sim = C.get_sim("DLRM")
+    rows = []
+
+    # sources: (tables, devices); targets cover more/fewer tables + devices
+    pairs = [((20, 4), (50, 4)), ((50, 4), (20, 4)),
+             ((20, 4), (20, 2)), ((20, 2), (20, 4))]
+    if C.FULL:
+        pairs += [((40, 4), (80, 4)), ((80, 4), (40, 4)),
+                  ((40, 4), (40, 2)), ((40, 2), (40, 4))]
+
+    agents = {}
+    for (sm, sd), (tm, td) in pairs:
+        if (sm, sd) not in agents:
+            train, _ = C.make_benchmark_suite(pool, sm, sd, n_tasks=n_tasks,
+                                              seed=0)
+            agents[(sm, sd)] = C.train_dreamshard(train, sim)
+        if (tm, td) not in agents:
+            train_t, _ = C.make_benchmark_suite(pool, tm, td,
+                                                n_tasks=n_tasks, seed=0)
+            agents[(tm, td)] = C.train_dreamshard(train_t, sim)
+        _, test_t = C.make_benchmark_suite(pool, tm, td, n_tasks=n_tasks,
+                                           seed=0)
+        baselines = C.eval_all_baselines(sim, test_t)
+        native = C.eval_strategy(
+            sim, test_t,
+            lambda t: agents[(tm, td)].place(t.raw_features, t.n_devices))
+        transferred = C.eval_strategy(
+            sim, test_t,
+            lambda t: agents[(sm, sd)].place(t.raw_features, t.n_devices))
+        rows.append({
+            "source": f"DLRM-{sm} ({sd})", "target": f"DLRM-{tm} ({td})",
+            "random": round(baselines["random"], 2),
+            "best_baseline": round(min(baselines.values()), 2),
+            "trained_on_target": round(native, 2),
+            "transferred": round(transferred, 2),
+            "transfer_gap_ms": round(transferred - native, 2),
+        })
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

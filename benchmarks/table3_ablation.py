@@ -1,0 +1,48 @@
+"""Paper Table 3/11: feature-group and cost-feature ablations + the
+w/ RNN variant, on DLRM tasks."""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.trainer import DreamShardConfig
+
+
+def run():
+    n_tasks, base_cfg = C.budget()
+    pool = C.get_pool("DLRM")
+    sim = C.get_sim("DLRM")
+    m, d = (50, 4) if C.FULL else (20, 4)
+    train, test = C.make_benchmark_suite(pool, m, d, n_tasks=n_tasks)
+
+    variants = {
+        "dreamshard": {},
+        "wo_cost": {"use_cost_features": False},
+        "wo_dim": {"feature_drop": "dim"},
+        "wo_pooling": {"feature_drop": "pooling"},
+        "wo_hash_size": {"feature_drop": "hash_size"},
+        "wo_table_size": {"feature_drop": "table_size"},
+        "wo_distribution": {"feature_drop": "distribution"},
+    }
+    rows = []
+    for name, overrides in variants.items():
+        cfg = DreamShardConfig(**{**vars(base_cfg).copy(), **overrides})
+        ds = C.train_dreamshard(train, sim, cfg)
+        rows.append({
+            "variant": name,
+            "train": round(ds.evaluate_tasks(train), 2),
+            "test": round(ds.evaluate_tasks(test), 2),
+        })
+        print(rows[-1], flush=True)
+    # w/ RNN variant = the RNN-augmented policy baseline
+    rnn = C.train_rnn(train, sim)
+    rows.append({"variant": "w_rnn",
+                 "train": round(C.eval_strategy(
+                     sim, train, lambda t: rnn.place(t.raw_features, d)), 2),
+                 "test": round(C.eval_strategy(
+                     sim, test, lambda t: rnn.place(t.raw_features, d)), 2)})
+    print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Quickstart: train a DreamShard placer on synthetic DLRM tables and
+compare it against the human-expert strategies on unseen tables.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.trainer import DreamShard, DreamShardConfig
+from repro.data.synthetic import make_dlrm_pool
+from repro.data.tasks import make_benchmark_suite
+from repro.sim.costsim import CostSimulator
+
+
+def main():
+    pool = make_dlrm_pool(seed=0)                 # 856 synthetic tables
+    sim = CostSimulator(seed=0)                   # the "hardware"
+    train_tasks, test_tasks = make_benchmark_suite(
+        pool, n_tables=50, n_devices=4, n_tasks=20)
+
+    print("training DreamShard on DLRM-50 (4 GPUs)...")
+    agent = DreamShard(train_tasks, sim, DreamShardConfig())
+    agent.train(eval_tasks=test_tasks[:5], log=True)
+
+    print("\n== held-out test tasks (unseen tables) ==")
+    rng = np.random.default_rng(0)
+    cap = sim.spec.mem_capacity_gb
+    rows = {"random": lambda t: B.random_place(t.raw_features, t.n_devices,
+                                               cap, rng)}
+    for s in B.EXPERT_STRATEGIES:
+        rows[s] = lambda t, s=s: B.expert_place(t.raw_features, t.n_devices,
+                                                cap, s)
+    rows["dreamshard"] = lambda t: agent.place(t.raw_features, t.n_devices)
+    base = None
+    for name, fn in rows.items():
+        cost = np.mean([sim.evaluate(t.raw_features, fn(t),
+                                     t.n_devices).overall
+                        for t in test_tasks])
+        base = base or cost
+        print(f"  {name:12s} {cost:7.2f} ms   ({(base / cost - 1) * 100:+.1f}%"
+              " vs random)")
+
+    # one concrete placement, end to end
+    t = test_tasks[0]
+    placement = agent.place(t.raw_features, t.n_devices)
+    print(f"\nplacement for task 0 ({t.n_tables} tables on"
+          f" {t.n_devices} devices): {placement.tolist()}")
+    print(f"cost: {sim.evaluate(t.raw_features, placement, t.n_devices).overall:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

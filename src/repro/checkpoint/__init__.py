@@ -1,0 +1,1 @@
+from repro.checkpoint.io import save_pytree, restore_pytree  # noqa: F401

@@ -1,0 +1,54 @@
+"""Minimal pytree checkpointing: npz arrays + json tree structure.
+
+Flat key-path encoding keeps restore independent of import order; arrays
+round-trip through numpy (bf16 stored as uint16 views with a dtype tag).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_pytree(tree, path: str):
+    os.makedirs(path, exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            arrays[k] = arr.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            arrays[k] = arr
+            meta[k] = str(arr.dtype)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    json.dump(meta, open(os.path.join(path, "meta.json"), "w"))
+
+
+def restore_pytree(template, path: str):
+    """Restore into the structure of `template` (shapes must match)."""
+    flat_t, treedef = _flatten(template)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    meta = json.load(open(os.path.join(path, "meta.json")))
+    leaves = []
+    for k in flat_t:
+        arr = data[k]
+        if meta[k] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,72 @@
+"""Assigned input shapes and ``input_specs()`` stand-ins.
+
+``input_specs`` returns ShapeDtypeStructs only -- weak-type-correct,
+shardable, no device allocation -- for every model input of a given
+(arch, shape) pair.  For VLM/audio archs, the modality frontend is a stub:
+the specs include a precomputed patch/frame embedding tensor of the right
+shape and the token span shrinks accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for the model inputs of one step.
+
+    train   -> {tokens, labels, loss_mask [, embeds]}
+    prefill -> {tokens [, embeds]}
+    decode  -> {tokens}  (the KV cache spec comes from LM.init_cache)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    nf = cfg.n_frontend_tokens if cfg.frontend else 0
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S - nf), jnp.int32),
+                 "labels": sds((B, S), jnp.int32),
+                 "loss_mask": sds((B, S), jnp.float32)}
+        if nf:
+            specs["embeds"] = sds((B, nf, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S - nf), jnp.int32)}
+        if nf:
+            specs["embeds"] = sds((B, nf, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def batch_specs_partition(cfg: ArchConfig, shape: InputShape, rules):
+    """PartitionSpecs matching input_specs (batch over data axes)."""
+    specs = {}
+    for name in input_specs(cfg, shape):
+        rank = {"tokens": 2, "labels": 2, "loss_mask": 2, "embeds": 3}[name]
+        specs[name] = rules.spec("batch", *([None] * (rank - 1)))
+    return specs

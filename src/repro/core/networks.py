@@ -1,0 +1,172 @@
+"""DreamShard's cost network and policy network (paper §3.2/3.3, App. B.1/B.2).
+
+Pure-JAX parameter pytrees; no framework deps.  Architectures follow the
+paper exactly:
+
+Cost network f_cost:
+  * shared table MLP 21-128-32 (ReLU)
+  * device repr = elementwise SUM of table reprs on the device
+  * three per-device heads 32-64-1: fwd-compute / bwd-compute / bwd-comm
+  * overall repr = elementwise MAX over device reprs; overall head 32-64-1
+
+Policy network pi:
+  * independent shared table MLP 21-128-32
+  * device repr = SUM of table reprs (incrementally maintainable)
+  * cost-feature MLP 3-64-32 on q_{t,d}
+  * shared scoring head 64-1 on concat(device repr, cost repr), softmax over
+    devices -> works for any number of devices.
+
+Both are size-agnostic: any number of tables/devices, enabling zero-shot
+generalization (paper Table 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = 32
+NUM_COST_FEATURES = 3  # [fwd_comp, bwd_comp, bwd_comm]
+
+
+# ---- generic MLP -------------------------------------------------------------
+
+def mlp_init(key, sizes):
+    params = []
+    for i, (n_in, n_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (n_in, n_out)) * jnp.sqrt(2.0 / n_in)
+        params.append({"w": w.astype(jnp.float32),
+                       "b": jnp.zeros((n_out,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---- cost network ------------------------------------------------------------
+
+def cost_net_init(key, num_features: int = 21):
+    ks = jax.random.split(key, 5)
+    return {
+        "table_mlp": mlp_init(ks[0], [num_features, 128, HIDDEN]),
+        "head_fwd": mlp_init(ks[1], [HIDDEN, 64, 1]),
+        "head_bwd": mlp_init(ks[2], [HIDDEN, 64, 1]),
+        "head_comm": mlp_init(ks[3], [HIDDEN, 64, 1]),
+        "head_overall": mlp_init(ks[4], [HIDDEN, 64, 1]),
+    }
+
+
+def cost_table_reprs(params, feats):
+    """(..., M, F) -> (..., M, HIDDEN)."""
+    return mlp_apply(params["table_mlp"], feats)
+
+
+def cost_device_heads(params, dev_repr):
+    """Per-device cost features from device reprs: (..., D, H) -> (..., D, 3)."""
+    fwd = mlp_apply(params["head_fwd"], dev_repr)
+    bwd = mlp_apply(params["head_bwd"], dev_repr)
+    comm = mlp_apply(params["head_comm"], dev_repr)
+    return jnp.concatenate([fwd, bwd, comm], axis=-1)
+
+
+def cost_overall_head(params, dev_repr, dev_mask=None):
+    """MAX-reduce device reprs -> overall cost scalar (..., )."""
+    if dev_mask is not None:
+        neg = jnp.finfo(dev_repr.dtype).min
+        dev_repr = jnp.where(dev_mask[..., None] > 0, dev_repr, neg)
+    overall_repr = jnp.max(dev_repr, axis=-2)
+    return mlp_apply(params["head_overall"], overall_repr)[..., 0]
+
+
+def reduce_tables(h, assign_onehot, reduction: str = "sum"):
+    """Reduce table reprs (..., M, H) into device reprs (..., D, H)."""
+    if reduction == "sum":
+        return assign_onehot @ h
+    if reduction == "mean":
+        counts = assign_onehot.sum(-1, keepdims=True)
+        return (assign_onehot @ h) / jnp.maximum(counts, 1.0)
+    if reduction == "max":
+        neg = jnp.finfo(h.dtype).min
+        masked = jnp.where(assign_onehot[..., None] > 0, h[..., None, :, :],
+                           neg)
+        out = masked.max(axis=-2)
+        return jnp.where(assign_onehot.sum(-1, keepdims=True) > 0, out, 0.0)
+    raise ValueError(reduction)
+
+
+def reduce_devices(dev, dev_mask=None, reduction: str = "max"):
+    """Reduce device reprs (..., D, H) into the overall repr (..., H)."""
+    if reduction == "max":
+        if dev_mask is not None:
+            neg = jnp.finfo(dev.dtype).min
+            dev = jnp.where(dev_mask[..., None] > 0, dev, neg)
+        return dev.max(axis=-2)
+    if dev_mask is not None:
+        dev = dev * dev_mask[..., None]
+    if reduction == "sum":
+        return dev.sum(axis=-2)
+    if reduction == "mean":
+        n = (dev_mask.sum(-1, keepdims=True) if dev_mask is not None
+             else dev.shape[-2])
+        return dev.sum(axis=-2) / jnp.maximum(n, 1.0)
+    raise ValueError(reduction)
+
+
+def cost_net_apply(params, feats, assign_onehot, table_mask=None,
+                   dev_mask=None, table_reduction: str = "sum",
+                   device_reduction: str = "max"):
+    """Full forward pass on a (possibly padded) placement.
+
+    feats: (..., M, F) normalized features
+    assign_onehot: (..., D, M) -- row d selects tables on device d
+    table_mask: (..., M) 1 for real tables; dev_mask: (..., D)
+    Reductions default to the paper's sum/max pair (App. B.3 compares the
+    alternatives; see benchmarks/b3_reductions.py).
+    returns (q (..., D, 3), overall (...,))
+    """
+    h = cost_table_reprs(params, feats)
+    if table_mask is not None:
+        h = h * table_mask[..., None]
+    dev = reduce_tables(h, assign_onehot, table_reduction)
+    q = cost_device_heads(params, dev)
+    if dev_mask is not None:
+        q = q * dev_mask[..., None]
+    overall_repr = reduce_devices(dev, dev_mask, device_reduction)
+    overall = mlp_apply(params["head_overall"], overall_repr)[..., 0]
+    return q, overall
+
+
+def predict_single_table_costs(params, feats):
+    """Per-table 'alone on a device' scalar cost -- used for the descending
+    sort before each episode (App. B.4.2)."""
+    h = cost_table_reprs(params, feats)           # (M, H)
+    q = cost_device_heads(params, h)              # (M, 3)
+    return q.sum(axis=-1)
+
+
+# ---- policy network ----------------------------------------------------------
+
+def policy_net_init(key, num_features: int = 21):
+    ks = jax.random.split(key, 3)
+    return {
+        "table_mlp": mlp_init(ks[0], [num_features, 128, HIDDEN]),
+        "cost_mlp": mlp_init(ks[1], [NUM_COST_FEATURES, 64, HIDDEN]),
+        "head": mlp_init(ks[2], [2 * HIDDEN, 1]),
+    }
+
+
+def policy_table_reprs(params, feats):
+    return mlp_apply(params["table_mlp"], feats)
+
+
+def policy_logits(params, dev_repr, q):
+    """(..., D, H) device sums + (..., D, 3) cost features -> (..., D) logits."""
+    hc = mlp_apply(params["cost_mlp"], q)
+    x = jnp.concatenate([dev_repr, hc], axis=-1)
+    return mlp_apply(params["head"], x)[..., 0]

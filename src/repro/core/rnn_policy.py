@@ -1,0 +1,171 @@
+"""RNN-based device placement baseline (paper App. D.2, after [13]).
+
+Adapted as in the paper: same 21-feature extraction MLP and per-device
+scoring head as DreamShard, but table representations are passed through an
+LSTM + content attention before the sum reduction, there is NO cost network
+(no cost features, zeros fed to the cost branch), and training is plain
+REINFORCE against *real hardware measurements* (the simulator) -- which is
+exactly why it is sample-starved and unstable on harder tasks (Table 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core import networks as N
+from repro.core import rollout as R
+from repro.data.tasks import Task
+from repro.optim import adam, apply_updates, linear_decay
+from repro.sim.costsim import CostSimulator
+
+H = N.HIDDEN
+
+
+def lstm_init(key, dim_in, dim_h):
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / np.sqrt(dim_h)
+    return {
+        "wx": jax.random.normal(k1, (dim_in, 4 * dim_h)) * scale,
+        "wh": jax.random.normal(k2, (dim_h, 4 * dim_h)) * scale,
+        "b": jnp.zeros((4 * dim_h,)),
+    }
+
+
+def lstm_apply(params, xs):
+    """(M, dim_in) -> (M, dim_h) hidden sequence."""
+    dim_h = params["wh"].shape[0]
+
+    def step(carry, x):
+        h, c = carry
+        gates = x @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((dim_h,)), jnp.zeros((dim_h,)))
+    _, hs = jax.lax.scan(step, init, xs)
+    return hs
+
+
+def attention(hs):
+    """Content-based self attention over the hidden sequence (M, H)."""
+    scores = hs @ hs.T / np.sqrt(hs.shape[-1])
+    mask = jnp.tril(jnp.ones_like(scores))            # causal over sequence
+    scores = jnp.where(mask > 0, scores, -1e9)
+    return jax.nn.softmax(scores, axis=-1) @ hs
+
+
+def rnn_policy_init(key):
+    ks = jax.random.split(key, 3)
+    base = N.policy_net_init(ks[0])
+    base["lstm"] = lstm_init(ks[1], H, H)
+    return base
+
+
+def rnn_table_reprs(params, feats):
+    h = N.policy_table_reprs(params, feats)           # shared feature MLP
+    hs = lstm_apply(params["lstm"], h)
+    return attention(hs)
+
+
+@dataclasses.dataclass
+class RNNPolicyConfig:
+    n_updates: int = 100          # hardware-measured REINFORCE updates
+    n_episode: int = 10
+    entropy_weight: float = 1e-3
+    lr: float = 5e-4
+    seed: int = 0
+
+
+class RNNPlacer:
+    """REINFORCE on real measurements; matched hardware budget vs DreamShard."""
+
+    def __init__(self, train_tasks: list[Task], sim: CostSimulator,
+                 config: RNNPolicyConfig | None = None):
+        self.tasks = train_tasks
+        self.sim = sim
+        self.cfg = config or RNNPolicyConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        k, self._key = jax.random.split(key)
+        self.params = rnn_policy_init(k)
+        self._opt = adam(linear_decay(self.cfg.lr, self.cfg.n_updates))
+        self.opt_state = self._opt.init(self.params)
+        self._grad_fns = {}
+        self._sample_fns = {}
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _sample_fn(self, n_devices, n_episodes, greedy):
+        sig = (n_devices, n_episodes, greedy)
+        if sig in self._sample_fns:
+            return self._sample_fns[sig]
+
+        @jax.jit
+        def fn(params, feats, sizes, cap, key):
+            h = rnn_table_reprs(params, feats)
+            actions, _, _, _ = R.rollout_with_reprs(
+                params, params, h, feats, sizes, cap, key,
+                n_devices=n_devices, n_episodes=n_episodes, greedy=greedy,
+                use_cost=False)
+            return actions
+
+        self._sample_fns[sig] = fn
+        return fn
+
+    def _grad_fn(self, n_devices, n_episodes):
+        sig = (n_devices, n_episodes)
+        if sig in self._grad_fns:
+            return self._grad_fns[sig]
+
+        def loss_fn(params, feats, sizes, cap, actions, adv, w_ent):
+            h = rnn_table_reprs(params, feats)
+            _, sum_logp, sum_ent, _ = R.rollout_with_reprs(
+                params, params, h, feats, sizes, cap,
+                jax.random.PRNGKey(0), n_devices=n_devices,
+                n_episodes=n_episodes, use_cost=False, actions_in=actions)
+            return -jnp.mean(adv * sum_logp) - w_ent * jnp.mean(sum_ent)
+
+        self._grad_fns[sig] = jax.jit(jax.grad(loss_fn))
+        return self._grad_fns[sig]
+
+    def train(self, log: bool = False):
+        cap = self.sim.spec.mem_capacity_gb
+        for step in range(self.cfg.n_updates):
+            task = self.tasks[self.rng.integers(len(self.tasks))]
+            feats = jnp.asarray(F.normalize_features(task.raw_features))
+            sizes = jnp.asarray(
+                task.raw_features[:, F.TABLE_SIZE_GB].astype(np.float32))
+            sample = self._sample_fn(task.n_devices, self.cfg.n_episode, False)
+            actions = np.asarray(sample(self.params, feats, sizes, cap,
+                                        self._next_key()))
+            rewards = np.array([
+                -self.sim.evaluate(task.raw_features, a, task.n_devices).overall
+                for a in actions])
+            adv = (rewards - rewards.mean()) / 10.0   # same 10ms scaling
+            grads = self._grad_fn(task.n_devices, self.cfg.n_episode)(
+                self.params, feats, sizes, cap, jnp.asarray(actions),
+                jnp.asarray(adv, dtype=jnp.float32),
+                self.cfg.entropy_weight)
+            upd, self.opt_state = self._opt.update(grads, self.opt_state,
+                                                   self.params)
+            self.params = apply_updates(self.params, upd)
+            if log and step % 20 == 0:
+                print(f"[rnn] step={step} mean_cost={-rewards.mean():.2f}ms")
+
+    def place(self, raw_features: np.ndarray, n_devices: int) -> np.ndarray:
+        feats = jnp.asarray(F.normalize_features(raw_features))
+        sizes = jnp.asarray(raw_features[:, F.TABLE_SIZE_GB].astype(np.float32))
+        sample = self._sample_fn(n_devices, 1, True)
+        actions = sample(self.params, feats, sizes,
+                         self.sim.spec.mem_capacity_gb, jax.random.PRNGKey(0))
+        return np.asarray(actions[0])

@@ -1,0 +1,196 @@
+"""Estimated-MDP rollouts (paper §3.1/3.3) as a single `lax.scan`.
+
+The MDP places one table per step.  Because both networks reduce tables with
+an elementwise SUM, the entire environment state is carried as running
+per-device sums of table representations -- no recomputation per step:
+
+  carry = (policy device sums (E,D,H), cost device sums (E,D,H),
+           memory used (E,D), rng, sum log-prob, sum entropy)
+
+At each step the cost network's per-device heads produce the augmented-state
+cost features q_{t,d} from the cost device sums, the policy scores each
+device, illegal devices (memory cap) are masked, and an action is sampled
+(or argmax'd at inference).  The final estimated reward is the negative of
+the cost network's overall head on the max-reduced device sums.
+
+Episodes are vmapped (E parallel episodes of the same task), the step loop
+is `lax.scan` over tables, and everything jits end-to-end -- one XLA call
+per (M, D, E) shape covers rollout + REINFORCE loss + gradient.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as N
+
+NEG = -1e9
+
+
+def _legal_mask(mem, size_t, cap):
+    """(E, D) legality; if a row has no legal device, everything is legal."""
+    legal = (mem + size_t) <= cap
+    any_legal = jnp.any(legal, axis=-1, keepdims=True)
+    return jnp.where(any_legal, legal, True)
+
+
+def estimate_overall(cost_params, dev_cost, reward_mode: str,
+                     log_targets: bool = True):
+    """Estimated episode cost from final cost-net device sums (E, D, H).
+
+    "head": the paper's max-reduced overall head.
+    "composed": rebuild the stage decomposition from the per-device q
+    heads -- max_d fwd + max_d bwd + 2 * max_d comm.  The q heads get 3*D
+    supervision targets per measurement (vs 1 for the overall head), so the
+    composed estimate ranks placements markedly better (see EXPERIMENTS.md
+    "Beyond-paper: composed reward").
+
+    With ``log_targets`` the cost net is trained on log1p(ms) (relative
+    error -- tasks span 15..150 ms), so predictions are mapped back with
+    expm1 before composing stage times.
+    """
+    inv = (lambda x: jnp.expm1(jnp.minimum(x, 12.0))) if log_targets \
+        else (lambda x: x)
+    if reward_mode == "head":
+        return inv(N.cost_overall_head(cost_params, dev_cost))
+    q = N.cost_device_heads(cost_params, dev_cost)        # (E, D, 3)
+    mx = inv(q.max(axis=-2))                              # (E, 3)
+    return mx[..., 0] + mx[..., 1] + 2.0 * mx[..., 2]
+
+
+def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
+                  n_devices, n_episodes, greedy, use_cost, actions_in=None,
+                  reward_mode="composed", log_targets=True):
+    """Shared core.  If actions_in is given (E, M), replay those actions."""
+    M = h_pol.shape[0]
+    H = h_pol.shape[1]
+    E, D = n_episodes, n_devices
+    replay = actions_in is not None
+    acts = jnp.swapaxes(actions_in, 0, 1) if replay else jnp.zeros((M, E), jnp.int32)
+
+    def step(carry, xs):
+        dev_pol, dev_cost, mem, k = carry
+        t, a_replay = xs
+        if use_cost:
+            q = N.cost_device_heads(cost_params, dev_cost)        # (E,D,3)
+            q = jax.lax.stop_gradient(q)
+        else:
+            q = jnp.zeros((E, D, N.NUM_COST_FEATURES))
+        logits = N.policy_logits(policy_params, dev_pol, q)       # (E,D)
+        legal = _legal_mask(mem, sizes[t], cap)
+        logits = jnp.where(legal, logits, NEG)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        if replay:
+            a = a_replay
+        elif greedy:
+            a = jnp.argmax(logits, axis=-1)
+        else:
+            k, ks = jax.random.split(k)
+            a = jax.random.categorical(ks, logits, axis=-1)
+        logp = jnp.take_along_axis(logp_all, a[:, None], axis=-1)[:, 0]
+        probs = jax.nn.softmax(logits, axis=-1)
+        ent = -jnp.sum(probs * jnp.where(legal, logp_all, 0.0), axis=-1)
+        onehot = jax.nn.one_hot(a, D)                             # (E,D)
+        dev_pol = dev_pol + onehot[..., None] * h_pol[t][None, None, :]
+        dev_cost = dev_cost + onehot[..., None] * h_cost[t][None, None, :]
+        mem = mem + onehot * sizes[t]
+        return (dev_pol, dev_cost, mem, k), (a, logp, ent)
+
+    init = (jnp.zeros((E, D, H)), jnp.zeros((E, D, H)), jnp.zeros((E, D)), key)
+    xs = (jnp.arange(M), acts)
+    (dev_pol, dev_cost, mem, _), (a_seq, logp_seq, ent_seq) = jax.lax.scan(
+        step, init, xs)
+    actions = jnp.swapaxes(a_seq, 0, 1)                           # (E, M)
+    sum_logp = logp_seq.sum(axis=0)
+    sum_ent = ent_seq.sum(axis=0)
+    if use_cost:
+        est_cost = estimate_overall(cost_params, dev_cost, reward_mode,
+                                    log_targets)
+    else:   # no cost network (RNN baseline): no estimate available
+        est_cost = jnp.zeros((E,))
+    return actions, sum_logp, sum_ent, est_cost
+
+
+@functools.partial(jax.jit, static_argnames=("n_devices", "n_episodes",
+                                             "greedy", "use_cost",
+                                             "reward_mode", "log_targets"))
+def rollout(policy_params, cost_params, feats, sizes, cap, key, *,
+            n_devices: int, n_episodes: int, greedy: bool = False,
+            use_cost: bool = True, reward_mode: str = "composed",
+            log_targets: bool = True):
+    """Sample (or greedily decode) placements on the estimated MDP.
+
+    feats: (M, F) normalized, ALREADY sorted descending by predicted
+    single-table cost.  Returns (actions (E,M), est_cost (E,)).
+    """
+    h_pol = N.policy_table_reprs(policy_params, feats)
+    h_cost = N.cost_table_reprs(cost_params, feats)
+    actions, _, _, est_cost = _scan_rollout(
+        policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
+        n_devices, n_episodes, greedy, use_cost, reward_mode=reward_mode,
+        log_targets=log_targets)
+    return actions, est_cost
+
+
+def rollout_with_reprs(policy_params, cost_params, h_pol, feats, sizes, cap,
+                       key, *, n_devices, n_episodes, greedy=False,
+                       use_cost=True, actions_in=None):
+    """Rollout with externally supplied policy table reprs (RNN baseline)."""
+    h_cost = N.cost_table_reprs(cost_params, feats) if use_cost else \
+        jnp.zeros_like(h_pol)
+    return _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes,
+                         cap, key, n_devices, n_episodes, greedy, use_cost,
+                         actions_in=actions_in)
+
+
+# ---- REINFORCE on the estimated MDP (Eq. 2) ----------------------------------
+
+def _rl_loss(policy_params, cost_params, feats, sizes, cap, key,
+             n_devices, n_episodes, w_entropy, use_cost,
+             reward_mode="composed", log_targets=True):
+    h_pol = N.policy_table_reprs(policy_params, feats)
+    h_cost = N.cost_table_reprs(cost_params, feats)
+    _, sum_logp, sum_ent, est_cost = _scan_rollout(
+        policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
+        n_devices, n_episodes, False, use_cost, reward_mode=reward_mode,
+        log_targets=log_targets)
+    reward = jax.lax.stop_gradient(-est_cost)                     # (E,)
+    baseline = reward.mean()
+    adv = reward - baseline
+    loss = -jnp.mean(adv * sum_logp) - w_entropy * jnp.mean(sum_ent)
+    return loss, reward
+
+
+def make_rl_update(optimizer, *, n_devices, n_episodes, w_entropy=1e-3,
+                   use_cost=True, reward_mode="composed", log_targets=True):
+    """Build a jitted REINFORCE update step bound to one (D, E) shape."""
+
+    @jax.jit
+    def update(policy_params, opt_state, cost_params, feats, sizes, cap, key):
+        (loss, reward), grads = jax.value_and_grad(_rl_loss, has_aux=True)(
+            policy_params, cost_params, feats, sizes, cap, key,
+            n_devices, n_episodes, w_entropy, use_cost, reward_mode,
+            log_targets)
+        upd, opt_state = optimizer.update(grads, opt_state, policy_params)
+        policy_params = jax.tree.map(lambda p, u: p + u, policy_params, upd)
+        return policy_params, opt_state, loss, reward
+
+    return update
+
+
+# ---- replayed-actions log-prob (REINFORCE with external rewards) -------------
+
+@functools.partial(jax.jit, static_argnames=("n_devices", "use_cost"))
+def replay_logp(policy_params, cost_params, feats, sizes, cap, actions, *,
+                n_devices: int, use_cost: bool = True):
+    """Sum log pi(a_t|s_t) and entropy for fixed action sequences (E, M)."""
+    h_pol = N.policy_table_reprs(policy_params, feats)
+    h_cost = N.cost_table_reprs(cost_params, feats)
+    _, sum_logp, sum_ent, _ = _scan_rollout(
+        policy_params, cost_params, h_pol, h_cost, sizes, cap,
+        jax.random.PRNGKey(0), n_devices, actions.shape[0], False, use_cost,
+        actions_in=actions)
+    return sum_logp, sum_ent

@@ -1,0 +1,319 @@
+"""DreamShard training (paper Algorithm 1) and inference (Algorithm 2).
+
+Iteratively: (1) collect N_collect cost measurements from the hardware
+oracle using placements generated on the estimated MDP by the current
+policy; (2) update the cost network N_cost mini-batches of MSE (Eq. 1);
+(3) update the policy N_RL REINFORCE steps purely inside the estimated MDP
+(Eq. 2) -- no hardware touched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core import networks as N
+from repro.core import rollout as R
+from repro.data.tasks import Task
+from repro.optim import adam, apply_updates, linear_decay
+from repro.sim.costsim import CostSimulator
+
+
+@dataclasses.dataclass
+class DreamShardConfig:
+    n_iterations: int = 10
+    n_collect: int = 10
+    n_cost: int = 300
+    n_batch: int = 64
+    n_rl: int = 10
+    n_episode: int = 10
+    entropy_weight: float = 1e-3
+    lr: float = 5e-4
+    cost_scale: float = 0.1      # targets in units of 10ms ('scale' mode)
+    # target transform: 'log1p' fits relative error (tasks span 15-150 ms);
+    # 'scale' is plain linear scaling
+    target_transform: str = "log1p"
+    seed: int = 0
+    use_cost_features: bool = True   # ablation: 'w/o cost'
+    feature_drop: str | None = None  # ablation: zero a feature group
+    # episode-reward estimator: "composed" rebuilds the stage decomposition
+    # from the per-device q heads (beyond-paper refinement, much denser
+    # supervision); "head" is the paper's max-reduced overall head
+    reward_mode: str = "composed"
+    # inference: greedy argmax (paper Algorithm 2) plus this many sampled
+    # candidate placements, keeping the lowest ESTIMATED cost -- still
+    # hardware-free.  1 = paper-faithful pure argmax.
+    inference_candidates: int = 16
+
+
+@dataclasses.dataclass
+class CostSample:
+    feats_norm: np.ndarray   # (M, F)
+    assignment: np.ndarray   # (M,)
+    q: np.ndarray            # (D, 3) scaled
+    overall: float           # scaled
+    n_devices: int
+
+
+class DreamShard:
+    """End-to-end DreamShard agent bound to a hardware oracle."""
+
+    def __init__(self, train_tasks: list[Task], sim: CostSimulator,
+                 config: DreamShardConfig | None = None):
+        self.tasks = train_tasks
+        self.sim = sim
+        self.cfg = config or DreamShardConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        k1, k2, self._key = jax.random.split(key, 3)
+        self.cost_params = N.cost_net_init(k1)
+        self.policy_params = N.policy_net_init(k2)
+
+        total_cost_steps = self.cfg.n_iterations * self.cfg.n_cost
+        total_rl_steps = self.cfg.n_iterations * self.cfg.n_rl
+        self._cost_opt = adam(linear_decay(self.cfg.lr, total_cost_steps))
+        self._rl_opt = adam(linear_decay(self.cfg.lr, total_rl_steps))
+        self.cost_opt_state = self._cost_opt.init(self.cost_params)
+        self.rl_opt_state = self._rl_opt.init(self.policy_params)
+
+        self.buffer: list[CostSample] = []
+        self._m_pad = max(t.n_tables for t in train_tasks)
+        self._d_pad = max(t.n_devices for t in train_tasks)
+        self._rl_updates = {}    # (D, E) -> jitted update
+        self._cost_update = self._build_cost_update()
+        self.history: list[dict] = []
+
+    # ---- feature plumbing -----------------------------------------------------
+
+    def _prepared(self, task: Task):
+        raw = task.raw_features
+        if self.cfg.feature_drop:
+            raw = F.drop_feature_group(raw, self.cfg.feature_drop)
+        feats = F.normalize_features(raw)
+        sizes = task.raw_features[:, F.TABLE_SIZE_GB].astype(np.float32)
+        return feats, sizes
+
+    def _sorted_order(self, feats_norm: np.ndarray) -> np.ndarray:
+        """Descending predicted single-table cost (App. B.4.2)."""
+        costs = np.asarray(
+            N.predict_single_table_costs(self.cost_params, jnp.asarray(feats_norm)))
+        return np.argsort(-costs, kind="stable")
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def transform_targets(self, ms):
+        if self.cfg.target_transform == "log1p":
+            return np.log1p(ms)
+        return np.asarray(ms) * self.cfg.cost_scale
+
+    @property
+    def _log_targets(self) -> bool:
+        return self.cfg.target_transform == "log1p"
+
+    # ---- Algorithm 1 stage 1: data collection ---------------------------------
+
+    def collect(self):
+        cap = self.sim.spec.mem_capacity_gb
+        for _ in range(self.cfg.n_collect):
+            task = self.tasks[self.rng.integers(len(self.tasks))]
+            feats, sizes = self._prepared(task)
+            order = self._sorted_order(feats)
+            actions, _ = R.rollout(
+                self.policy_params, self.cost_params,
+                jnp.asarray(feats[order]), jnp.asarray(sizes[order]), cap,
+                self._next_key(), n_devices=task.n_devices, n_episodes=1,
+                greedy=False, use_cost=self.cfg.use_cost_features,
+                reward_mode=self.cfg.reward_mode,
+                log_targets=self._log_targets)
+            assignment = np.empty(task.n_tables, dtype=np.int64)
+            assignment[order] = np.asarray(actions[0])
+            res = self.sim.evaluate(task.raw_features, assignment,
+                                    task.n_devices)
+            self.buffer.append(CostSample(
+                feats_norm=feats, assignment=assignment,
+                q=self.transform_targets(res.cost_features),
+                overall=float(self.transform_targets(res.overall)),
+                n_devices=task.n_devices))
+
+    # ---- Algorithm 1 stage 2: cost network update (Eq. 1) ---------------------
+
+    def _build_cost_update(self):
+        opt = self._cost_opt
+
+        @jax.jit
+        def update(cost_params, opt_state, feats, onehot, tmask, dmask,
+                   q_t, c_t):
+            def loss_fn(cp):
+                q, overall = N.cost_net_apply(cp, feats, onehot, tmask, dmask)
+                lq = jnp.sum((q - q_t) ** 2 * dmask[..., None]) / (
+                    3.0 * jnp.maximum(dmask.sum(), 1.0))
+                lc = jnp.mean((overall - c_t) ** 2)
+                return lq + lc
+            loss, grads = jax.value_and_grad(loss_fn)(cost_params)
+            upd, opt_state = opt.update(grads, opt_state, cost_params)
+            return apply_updates(cost_params, upd), opt_state, loss
+
+        return update
+
+    def _cost_batch(self, idx: np.ndarray):
+        B, Mp, Dp = len(idx), self._m_pad, self._d_pad
+        feats = np.zeros((B, Mp, F.NUM_FEATURES), np.float32)
+        onehot = np.zeros((B, Dp, Mp), np.float32)
+        tmask = np.zeros((B, Mp), np.float32)
+        dmask = np.zeros((B, Dp), np.float32)
+        q_t = np.zeros((B, Dp, 3), np.float32)
+        c_t = np.zeros((B,), np.float32)
+        for j, i in enumerate(idx):
+            s = self.buffer[i]
+            m, d = s.feats_norm.shape[0], s.n_devices
+            feats[j, :m] = s.feats_norm
+            onehot[j, s.assignment, np.arange(m)] = 1.0
+            tmask[j, :m] = 1.0
+            dmask[j, :d] = 1.0
+            q_t[j, :d] = s.q
+            c_t[j] = s.overall
+        return feats, onehot, tmask, dmask, q_t, c_t
+
+    def update_cost(self, n_steps: int | None = None):
+        n_steps = n_steps if n_steps is not None else self.cfg.n_cost
+        losses = []
+        for _ in range(n_steps):
+            idx = self.rng.integers(len(self.buffer),
+                                    size=min(self.cfg.n_batch, len(self.buffer)))
+            batch = self._cost_batch(idx)
+            self.cost_params, self.cost_opt_state, loss = self._cost_update(
+                self.cost_params, self.cost_opt_state, *map(jnp.asarray, batch))
+            losses.append(float(loss))
+        return float(np.mean(losses)) if losses else 0.0
+
+    # ---- Algorithm 1 stage 3: policy update on the estimated MDP (Eq. 2) ------
+
+    def _rl_update_fn(self, n_devices: int):
+        key = (n_devices, self.cfg.n_episode)
+        if key not in self._rl_updates:
+            self._rl_updates[key] = R.make_rl_update(
+                self._rl_opt, n_devices=n_devices,
+                n_episodes=self.cfg.n_episode,
+                w_entropy=self.cfg.entropy_weight,
+                use_cost=self.cfg.use_cost_features,
+                reward_mode=self.cfg.reward_mode,
+                log_targets=self._log_targets)
+        return self._rl_updates[key]
+
+    def update_policy(self, n_steps: int | None = None):
+        n_steps = n_steps if n_steps is not None else self.cfg.n_rl
+        cap = self.sim.spec.mem_capacity_gb
+        rewards = []
+        for _ in range(n_steps):
+            task = self.tasks[self.rng.integers(len(self.tasks))]
+            feats, sizes = self._prepared(task)
+            order = self._sorted_order(feats)
+            update = self._rl_update_fn(task.n_devices)
+            self.policy_params, self.rl_opt_state, _, reward = update(
+                self.policy_params, self.rl_opt_state, self.cost_params,
+                jnp.asarray(feats[order]), jnp.asarray(sizes[order]), cap,
+                self._next_key())
+            rewards.append(float(np.mean(np.asarray(reward))))
+        return float(np.mean(rewards)) if rewards else 0.0
+
+    # ---- full loop -------------------------------------------------------------
+
+    def train(self, eval_tasks: list[Task] | None = None,
+              log: bool = False):
+        for it in range(self.cfg.n_iterations):
+            t0 = time.perf_counter()
+            self.collect()
+            cost_loss = self.update_cost()
+            mean_reward = self.update_policy()
+            entry = {"iteration": it, "cost_loss": cost_loss,
+                     "mean_est_reward": mean_reward,
+                     "wall_s": time.perf_counter() - t0,
+                     "sim_evals": self.sim.num_evaluations}
+            if eval_tasks is not None:
+                entry["eval_cost_ms"] = self.evaluate_tasks(eval_tasks)
+            self.history.append(entry)
+            if log:
+                print(f"[dreamshard] iter={it} cost_loss={cost_loss:.4f} "
+                      f"est_reward={mean_reward:.3f} "
+                      + (f"eval={entry.get('eval_cost_ms', float('nan')):.2f}ms"
+                         if eval_tasks else ""))
+        return self.history
+
+    # ---- Algorithm 2: inference -------------------------------------------------
+
+    def place(self, raw_features: np.ndarray, n_devices: int,
+              n_candidates: int | None = None) -> np.ndarray:
+        """Algorithm 2 (hardware-free inference): greedy argmax decode, plus
+        optional sampled candidates ranked by the estimated cost."""
+        raw = (F.drop_feature_group(raw_features, self.cfg.feature_drop)
+               if self.cfg.feature_drop else raw_features)
+        feats = F.normalize_features(raw)
+        sizes = raw_features[:, F.TABLE_SIZE_GB].astype(np.float32)
+        order = self._sorted_order(feats)
+        common = dict(n_devices=n_devices,
+                      use_cost=self.cfg.use_cost_features,
+                      reward_mode=self.cfg.reward_mode,
+                      log_targets=self._log_targets)
+        args = (self.policy_params, self.cost_params,
+                jnp.asarray(feats[order]), jnp.asarray(sizes[order]),
+                self.sim.spec.mem_capacity_gb)
+        actions, est = R.rollout(*args, jax.random.PRNGKey(0),
+                                 n_episodes=1, greedy=True, **common)
+        actions, est = np.asarray(actions), np.asarray(est)
+        k = self.cfg.inference_candidates if n_candidates is None \
+            else n_candidates
+        if k > 1:
+            a2, e2 = R.rollout(*args, jax.random.PRNGKey(1),
+                               n_episodes=k - 1, greedy=False, **common)
+            actions = np.concatenate([actions, np.asarray(a2)])
+            est = np.concatenate([est, np.asarray(e2)])
+        best = int(np.argmin(est))
+        assignment = np.empty(raw_features.shape[0], dtype=np.int64)
+        assignment[order] = actions[best]
+        return assignment
+
+    def save(self, path: str):
+        """Checkpoint the trained agent (both networks + config)."""
+        import json
+        import os
+        from repro.checkpoint import save_pytree
+        save_pytree({"cost": self.cost_params,
+                     "policy": self.policy_params}, path)
+        json.dump(dataclasses.asdict(self.cfg),
+                  open(os.path.join(path, "config.json"), "w"))
+
+    def restore(self, path: str):
+        from repro.checkpoint import restore_pytree
+        tree = restore_pytree({"cost": self.cost_params,
+                               "policy": self.policy_params}, path)
+        self.cost_params = tree["cost"]
+        self.policy_params = tree["policy"]
+
+    def cost_mse(self, samples: list["CostSample"]) -> float:
+        """Test MSE of the cost network on held-out cost samples (Fig 7)."""
+        import jax.numpy as jnp
+        idx_save, buf_save = None, self.buffer
+        self.buffer = samples
+        batch = self._cost_batch(np.arange(len(samples)))
+        self.buffer = buf_save
+        feats, onehot, tmask, dmask, q_t, c_t = map(jnp.asarray, batch)
+        q, overall = N.cost_net_apply(self.cost_params, feats, onehot,
+                                      tmask, dmask)
+        lq = float(jnp.sum((q - q_t) ** 2 * dmask[..., None])
+                   / (3.0 * jnp.maximum(dmask.sum(), 1.0)))
+        lc = float(jnp.mean((overall - c_t) ** 2))
+        return lq + lc
+
+    def evaluate_tasks(self, tasks: list[Task]) -> float:
+        costs = [self.sim.evaluate(t.raw_features,
+                                   self.place(t.raw_features, t.n_devices),
+                                   t.n_devices).overall
+                 for t in tasks]
+        return float(np.mean(costs))

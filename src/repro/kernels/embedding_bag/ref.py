@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused embedding-bag kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(arena: jax.Array, indices: jax.Array) -> jax.Array:
+    """arena: (R, D), indices: (N, P) arena rows (0 = zero row) -> (N, D)."""
+    rows = jnp.take(arena, indices, axis=0)          # (N, P, D)
+    return rows.astype(jnp.float32).sum(axis=1)
+
+
+def embedding_bag_grad_ref(arena_shape, indices: jax.Array,
+                           grad_out: jax.Array) -> jax.Array:
+    """Scatter-add gradient w.r.t. the arena (row-wise)."""
+    n, p = indices.shape
+    g = jnp.zeros(arena_shape, jnp.float32)
+    flat_idx = indices.reshape(-1)
+    flat_g = jnp.repeat(grad_out.astype(jnp.float32)[:, None, :], p,
+                        axis=1).reshape(-1, arena_shape[1])
+    g = g.at[flat_idx].add(flat_g)
+    return g.at[0].set(0.0)                          # zero row stays zero

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal flash attention forward (optionally sliding
+window).
+
+TPU-native tiling: the grid is (batch*heads, q_blocks, kv_blocks) with the
+kv axis innermost, so each (bh, qi) output tile is revisited sequentially
+across kv steps -- the online-softmax running max / denominator / weighted
+accumulator live in VMEM scratch and the normalized tile is written once
+on the last kv step.  Block shapes are (q_block, head_dim) with head_dim a
+128-lane multiple and q/kv blocks MXU-aligned; the S x S score matrix is
+never materialized (only a (q_block, kv_block) tile).
+
+This is the serving/prefill hot-spot kernel; the pure-jnp oracle is
+``ref.py`` and the blockwise lax.scan implementation used by the model
+(`repro.models.layers.flash_attention`) is an independent second oracle.
+Validated in interpret mode (CPU container; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      q_block, kv_block, n_kv, causal, window, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (qb, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (kb, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (q_block, kv_block), 1)
+    mask = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block", "interpret",
+                                             "scale"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: int | None = None, q_block: int = 128,
+                        kv_block: int = 128, interpret: bool = True,
+                        scale: float | None = None):
+    """q, k, v: (BH, S, hd) same head count, hd % 128 == 0 -> (BH, S, hd)."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    assert hd % 128 == 0, "pad head_dim to a 128-lane multiple (ops.py)"
+    assert S % q_block == 0 and T % kv_block == 0
+    nq, nk = S // q_block, T // kv_block
+    # scale uses the TRUE head dim (the caller may have lane-padded hd)
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, q_block=q_block, kv_block=kv_block, n_kv=nk,
+        causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

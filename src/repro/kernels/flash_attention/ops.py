@@ -1,0 +1,54 @@
+"""Public op: Pallas flash attention over (B, S, H, hd) layouts.
+
+Pads head_dim to 128 lanes and sequence to block multiples, folds (B, H)
+into the grid's leading axis, and dispatches the Pallas kernel (interpret
+mode off-TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, q_block: int = 128,
+                    kv_block: int = 128):
+    """q, k, v: (B, S, H, hd) same head count -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    hd_pad = int(np.ceil(hd / 128) * 128) - hd
+    s_pad = -S % q_block
+    t_pad = -T % kv_block
+
+    def prep(x, seq_pad):
+        x = jnp.pad(x, ((0, 0), (0, seq_pad), (0, 0), (0, hd_pad)))
+        x = jnp.moveaxis(x, 2, 1)                      # (B, H, S, hd)
+        return x.reshape(B * H, x.shape[2], hd + hd_pad)
+
+    out = flash_attention_fwd(prep(q, s_pad), prep(k, t_pad), prep(v, t_pad),
+                              causal=causal, window=window, q_block=q_block,
+                              kv_block=kv_block, interpret=_use_interpret(),
+                              scale=1.0 / np.sqrt(hd))
+    out = out.reshape(B, H, S + s_pad, hd + hd_pad)
+    return jnp.moveaxis(out, 1, 2)[:, :S, :, :hd]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None):
+    B, S, H, hd = q.shape
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, x.shape[1], hd)
+
+    out = attention_ref(fold(q), fold(k), fold(v), causal=causal,
+                        window=window)
+    return jnp.moveaxis(out.reshape(B, H, S, hd), 1, 2)

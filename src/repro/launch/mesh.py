@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Functions (not module constants) so importing never touches jax device
+state.  Single pod = 256 chips as (data=16, model=16); multi-pod = 2 pods
+= 512 chips as (pod=2, data=16, model=16) with the pod axis folded into
+data parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def production_rules(*, multi_pod: bool = False,
+                     strategy: str = "tp") -> ShardingRules:
+    """strategy: "tp" = 16-way tensor parallel x 16-way FSDP/data (default);
+    "fsdp" = pure ZeRO-3 over all 256 chips, no tensor parallelism (wins
+    when per-device batch is small and layers are fat -- see EXPERIMENTS.md
+    §Perf it-4)."""
+    if strategy == "fsdp":
+        batch = (("pod", "data", "model") if multi_pod
+                 else ("data", "model"))
+        return ShardingRules(batch_axes=batch, model_axis=None,
+                             fsdp_axes=("data", "model"))
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(batch_axes=batch, model_axis="model")
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/experiments."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,210 @@
+"""Jitted step builders: train_step (loss + AdamW), prefill and decode
+serve steps, with in/out shardings bound to a mesh.
+
+These are the functions the multi-pod dry-run lowers and compiles for every
+(architecture x input shape x mesh) combination, and the same functions the
+CPU examples execute at reduced scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape, input_specs
+from repro.models.config import ArchConfig
+from repro.models.sharding import NO_SHARDING, ShardingRules
+from repro.models.transformer import LM, lm_loss
+from repro.optim import adamw, apply_updates
+
+
+@dataclasses.dataclass
+class StepBundle:
+    model: LM
+    train_step: Optional[object] = None
+    prefill_step: Optional[object] = None
+    decode_step: Optional[object] = None
+    init_fn: Optional[object] = None
+
+
+def build_model(cfg: ArchConfig, rules: ShardingRules = NO_SHARDING,
+                remat: bool = True, q_chunk: int = 1024,
+                kv_chunk: int = 1024, layer_loop: str = "scan") -> LM:
+    return LM(cfg, rules=rules, remat=remat, q_chunk=q_chunk,
+              kv_chunk=kv_chunk, layer_loop=layer_loop)
+
+
+def make_train_step(model: LM, lr: float = 3e-4, weight_decay: float = 0.1,
+                    moe_aux_weight: float = 0.01, n_microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``n_microbatches > 1`` the global batch is split and gradients
+    accumulate across a `lax.scan` (one grads-sized f32 buffer); peak
+    activation memory scales down with the microbatch count while the
+    optimizer update and gradient reductions still happen once per step.
+    """
+    opt = adamw(lr, weight_decay=weight_decay)
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        loss, aux = model.forward_loss(
+            params, batch["tokens"], batch["labels"],
+            loss_mask=batch.get("loss_mask"), embeds=batch.get("embeds"))
+        if cfg.moe:
+            loss = loss + moe_aux_weight * aux
+        return loss, aux
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            n = n_microbatches
+            mb = jax.tree.map(
+                lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+            def acc(carry, b):
+                g_acc, l_acc, a_acc = carry
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, b)
+                g_acc = jax.tree.map(
+                    lambda ga, gi: ga + gi.astype(ga.dtype), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            # f32 accumulator for <=4 microbatches; bf16 beyond (the f32
+            # param-scale buffer dominates temp memory at high counts)
+            acc_dt = jnp.float32 if n <= 4 else jnp.bfloat16
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss, aux), _ = jax.lax.scan(acc, (zeros, 0.0, 0.0), mb)
+            grads = jax.tree.map(lambda g, p: (g / n).astype(p.dtype),
+                                 grads, params)
+            loss, aux = loss / n, aux / n
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "moe_aux": aux}
+
+    return opt, train_step
+
+
+def make_prefill_step(model: LM, capacity: int | None = None):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, tokens=batch["tokens"],
+                                      embeds=batch.get("embeds"),
+                                      capacity=capacity)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(model: LM):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+    return decode_step
+
+
+# ---- sharded AOT lowering (used by the dry-run and real launches) --------------
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _mirror_specs(state_shape, param_specs):
+    """Map param specs onto any state pytree whose leaves mirror params."""
+    flat_specs, _ = jax.tree.flatten(
+        param_specs, is_leaf=lambda s: isinstance(s, P))
+
+    def assign(leaf):
+        # scalars (step counters) replicate; tensors mirror params by shape
+        return P() if getattr(leaf, "ndim", 0) == 0 else None
+
+    leaves, treedef = jax.tree.flatten(state_shape)
+    specs = []
+    # params appear repeatedly (m, v); cycle through param specs by shape
+    pool = list(flat_specs)
+    pi = 0
+    for leaf in leaves:
+        if getattr(leaf, "ndim", 0) == 0:
+            specs.append(P())
+        else:
+            specs.append(pool[pi % len(pool)])
+            pi += 1
+    return jax.tree.unflatten(treedef, specs)
+
+
+def lower_train(cfg: ArchConfig, shape: InputShape, mesh,
+                rules: ShardingRules, lr: float = 3e-4,
+                q_chunk: int = 1024, kv_chunk: int = 1024,
+                layer_loop: str = "scan", remat: bool = True,
+                n_microbatches: int = 1):
+    """AOT-lower a full sharded train step from ShapeDtypeStructs."""
+    rules = rules.for_batch(shape.global_batch, mesh)
+    model = build_model(cfg, rules, remat=remat, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk, layer_loop=layer_loop)
+    opt, train_step = make_train_step(model, lr=lr,
+                                      n_microbatches=n_microbatches)
+    aparams = model.abstract_params()
+    pspecs = model.param_specs()
+    astate = jax.eval_shape(opt.init, aparams)
+    sspecs = _mirror_specs(astate, pspecs)
+    batch = input_specs(cfg, shape)
+    bspecs = {k: rules.spec("batch", *([None] * (len(v.shape) - 1)))
+              for k, v in batch.items()}
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, sspecs), _ns(mesh, bspecs))
+    out_sh = (_ns(mesh, pspecs), _ns(mesh, sspecs),
+              {"loss": NamedSharding(mesh, P()),
+               "moe_aux": NamedSharding(mesh, P())})
+    fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    return fn.lower(aparams, astate, batch), model
+
+
+def lower_prefill(cfg: ArchConfig, shape: InputShape, mesh,
+                  rules: ShardingRules, q_chunk: int = 1024,
+                  kv_chunk: int = 1024, layer_loop: str = "scan",
+                  remat: bool = True):
+    rules = rules.for_batch(shape.global_batch, mesh)
+    model = build_model(cfg, rules, remat=remat, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk, layer_loop=layer_loop)
+    model.embed_onehot = False          # inference: plain gather embed
+    step = make_prefill_step(model, capacity=shape.seq_len)
+    aparams = model.abstract_params()
+    pspecs = model.param_specs()
+    batch = input_specs(cfg, shape)
+    bspecs = {k: rules.spec("batch", *([None] * (len(v.shape) - 1)))
+              for k, v in batch.items()}
+    cspecs = model.cache_specs(rules)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, bspecs))
+    out_sh = (NamedSharding(mesh, rules.spec("batch", None, "model")),
+              _ns(mesh, cspecs))
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+    return fn.lower(aparams, batch), model
+
+
+def lower_decode(cfg: ArchConfig, shape: InputShape, mesh,
+                 rules: ShardingRules, window_capacity: int | None = None,
+                 layer_loop: str = "scan"):
+    """serve_step: ONE new token against a seq_len KV cache."""
+    rules = rules.for_batch(shape.global_batch, mesh)
+    model = build_model(cfg, rules, remat=False, layer_loop=layer_loop)
+    model.embed_onehot = False          # inference: plain gather embed
+    step = make_decode_step(model)
+    aparams = model.abstract_params()
+    pspecs = model.param_specs()
+    capacity = window_capacity or shape.seq_len
+    acache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, capacity))
+    cspecs = model.cache_specs(rules)
+    batch = input_specs(cfg, shape)
+    bspecs = {k: rules.spec("batch", *([None] * (len(v.shape) - 1)))
+              for k, v in batch.items()}
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, cspecs), _ns(mesh, bspecs))
+    out_sh = (NamedSharding(mesh, rules.spec("batch", None, "model")),
+              _ns(mesh, cspecs))
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,))
+    return fn.lower(aparams, acache, batch), model

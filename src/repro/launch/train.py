@@ -1,0 +1,66 @@
+"""Training launcher: pick an architecture config (``--arch``), an input
+shape, and a mesh; runs real steps at reduced scale on CPU or lowers the
+full production config (``--dryrun`` delegates to launch.dryrun).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+      --steps 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, real steps on local devices")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs as C
+    from repro.launch import steps as ST
+
+    cfg = (C.get_smoke(args.arch) if args.smoke
+           else C.get_full(args.arch)).resolve(1)
+    model = ST.build_model(cfg, remat=False, q_chunk=min(args.seq, 512),
+                           kv_chunk=min(args.seq, 512))
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M")
+
+    opt, train_step = ST.make_train_step(model, lr=args.lr)
+    opt_state = opt.init(params)
+    step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    rng = np.random.default_rng(0)
+    nf = cfg.n_frontend_tokens if cfg.frontend else 0
+    B, S = args.batch, args.seq
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S - nf)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                  jnp.int32),
+            "loss_mask": jnp.ones((B, S), jnp.float32)}
+        if nf:
+            batch["embeds"] = jnp.asarray(
+                rng.normal(0, 0.02, (B, nf, cfg.d_model)), jnp.bfloat16)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        print(f"step {i:3d} loss {loss:.4f} "
+              f"({(time.perf_counter() - t0) * 1e3:.0f} ms)")
+        assert np.isfinite(loss)
+
+
+if __name__ == "__main__":
+    main()

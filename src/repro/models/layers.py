@@ -1,0 +1,243 @@
+"""Core transformer layers: RMSNorm, RoPE, flash-style attention (GQA +
+sliding window), SwiGLU/GELU MLP, and sort-based expert-parallel MoE.
+
+All attention in train/prefill is blockwise (nested `lax.scan` over query
+and key chunks with running-max/denominator accumulation -- the TPU-adapted
+flash pattern) so the 32k prefill never materializes an S x S score matrix.
+Decode attends a KV cache with position masking (circular buffer for
+sliding-window archs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, weight, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---- rotary embeddings --------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---- blockwise (flash-style) attention ---------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    constrain=None):
+    """Blockwise attention. q, k, v: (B,S,H,hd) -- SAME head count (the
+    caller expands GQA kv heads first so the head axis stays cleanly
+    shardable over the model axis; a grouped layout would split heads into
+    (Hkv, G) factors no mesh axis divides).
+
+    Returns (B, S, H, hd).  Never materializes more than a
+    (B, H, q_chunk, kv_chunk) score block.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    # pad non-divisible lengths; padded k positions are in the causal
+    # future of every real q position, so the mask discards them, and
+    # padded q rows are sliced off the output
+    S_pad = -S % qc
+    T_pad = -T % kc
+    if S_pad:
+        q = jnp.pad(q, ((0, 0), (0, S_pad), (0, 0), (0, 0)))
+    if T_pad:
+        k = jnp.pad(k, ((0, 0), (0, T_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T_pad), (0, 0), (0, 0)))
+    S_full, T_full = S + S_pad, T + T_pad
+    nq, nk = S_full // qc, T_full // kc
+    scale = 1.0 / np.sqrt(hd)
+    pin = constrain or (lambda t: t)
+
+    qb = pin(jnp.moveaxis(q.reshape(B, nq, qc, H, hd), 1, 0))   # (nq,B,qc,H,hd)
+    kb = pin(jnp.moveaxis(k.reshape(B, nk, kc, H, hd), 1, 0))
+    vb = pin(jnp.moveaxis(v.reshape(B, nk, kc, H, hd), 1, 0))
+    del k, v
+
+    @jax.checkpoint
+    def q_step(_, q_xs):
+        qi, qblk = q_xs
+        q_pos = qi * qc + jnp.arange(qc)
+
+        @jax.checkpoint
+        def kv_step(carry, kv_xs):
+            m, l, acc = carry
+            ki, kblk, vblk = kv_xs
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32),
+                jnp.zeros((B, H, qc, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]            # (B,H,qc,hd)
+        return None, jnp.moveaxis(out, 2, 1)                    # (B,qc,H,hd)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, S_full, H, hd)
+    return out[:, :S].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask):
+    """Single-token attention over a cache.
+
+    q: (B, 1, Hq, hd); caches: (B, T, Hkv, hd); valid_mask: (B, T) bool.
+    """
+    B, _, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qr = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# ---- MLP ----------------------------------------------------------------------
+
+def mlp_apply(params, x, act: str):
+    if act == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["wg"])
+        up = jnp.einsum("...d,df->...f", x, params["wu"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wu"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---- sort-based expert-parallel MoE -------------------------------------------
+
+def moe_apply(params, x, *, n_experts: int, top_k: int,
+              capacity_factor: float, act: str, constrain=None,
+              seq_chunks: int = 1):
+    """Top-k routed MoE with block-local sort-based capacity dispatch.
+
+    x: (B, S, D).  Routing, sorting, and packing happen PER (example,
+    sequence-chunk) block; with ``seq_chunks = tp`` the chunk axis carries
+    the model-axis sharding, so the dispatch gather and combine scatter
+    stay fully shard-local (no all-gather of the sequence-parallel stream)
+    and the ONLY cross-shard traffic is the expert-parallel all-to-all
+    into the (E/model) expert grid around the expert FFN einsum.  Only
+    integer/weight index maps are built at routing granularity -- never an
+    (S*K, D) tensor.  FLOPs scale with routed capacity E*C = S*K*cf.
+    """
+    B, S, D = x.shape
+    n = max(1, seq_chunks)
+    while S % n:
+        n //= 2
+    Sn = S // n
+    NK = Sn * top_k
+    cap = int(np.ceil(capacity_factor * NK / n_experts))
+    EC = n_experts * cap
+    pin = constrain or (lambda t, *a: t)
+
+    router_logits = jnp.einsum("bsd,de->bse", x, params["router"])
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)                  # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    tok_of_slot = jnp.repeat(jnp.arange(Sn), top_k)             # (NK,)
+
+    def route(fe, fw):
+        """fe/fw: (NK,) -> (EC,) slot->token index map + weights."""
+        order = jnp.argsort(fe, stable=True)
+        sorted_e = fe[order]
+        group_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+        pos = jnp.arange(NK) - group_start[sorted_e]
+        keep = pos < cap
+        dest = jnp.where(keep, sorted_e * cap + pos, EC)
+        tok_buf = jnp.full((EC + 1,), Sn, jnp.int32).at[dest].set(
+            tok_of_slot[order].astype(jnp.int32))
+        w_buf = jnp.zeros((EC + 1,), x.dtype).at[dest].set(
+            fw[order].astype(x.dtype))
+        return tok_buf[:-1], w_buf[:-1]
+
+    fe = top_e.reshape(B, n, NK)
+    fw = top_w.reshape(B, n, NK)
+    tok_buf, w_buf = jax.vmap(jax.vmap(route))(fe, fw)          # (B, n, EC)
+    tok_buf = pin(tok_buf, "batch", "model", None)
+    w_buf = pin(w_buf, "batch", "model", None)
+
+    # dispatch: block-local gather from the sentinel-padded token stream
+    xr = pin(x.reshape(B, n, Sn, D), "batch", "model", None, None)
+    x1 = jnp.concatenate([xr, jnp.zeros((B, n, 1, D), x.dtype)], axis=2)
+    expert_in = jnp.take_along_axis(
+        x1, tok_buf[..., None].astype(jnp.int32), axis=2)       # (B, n, EC, D)
+    grid = expert_in.reshape(B, n, n_experts, cap, D)
+    grid = pin(grid, "batch", None, "model", None, None)        # expert a2a
+
+    if act == "swiglu":
+        gate = jnp.einsum("bnecd,edf->bnecf", grid, params["wg"])
+        up = jnp.einsum("bnecd,edf->bnecf", grid, params["wu"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jnp.einsum("bnecd,edf->bnecf", grid, params["wu"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    expert_out = jnp.einsum("bnecf,efd->bnecd", h, params["wo"])
+    expert_out = pin(expert_out.reshape(B, n, EC, D),
+                     "batch", "model", None, None)              # back a2a
+
+    # combine: weight in model dtype, block-local scatter-add by token id
+    weighted = expert_out * w_buf[..., None]
+
+    def combine(rows, toks):
+        y = jnp.zeros((Sn + 1, D), rows.dtype)
+        return y.at[toks].add(rows)[:Sn]
+
+    y = jax.vmap(jax.vmap(combine))(weighted, tok_buf)          # (B, n, Sn, D)
+    y = pin(y, "batch", "model", None, None)
+    aux = moe_load_balance_loss(probs.reshape(B * S, n_experts),
+                                top_e.reshape(B * S, top_k), n_experts)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_load_balance_loss(probs, top_e, n_experts: int):
+    """Switch-style load-balance auxiliary loss."""
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_routed * mean_prob)

@@ -1,0 +1,73 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Single-pod production mesh is ``(data=16, model=16)``; multi-pod prepends a
+``pod`` axis folded into data parallelism.  The model code is mesh-agnostic:
+it receives a ``ShardingRules`` and calls ``constrain`` with logical axis
+names; with rules disabled (CPU smoke tests) everything is a no-op.
+
+Logical axes:
+  batch  -> ('pod', 'data') or ('data',)
+  model  -> 'model' (tensor/expert parallel)
+  None   -> replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch_axes: tuple = ("data",)
+    model_axis: str | None = "model"     # None = no tensor parallelism
+    fsdp_axes: tuple = ("data",)         # axes weights are ZeRO-3-sharded on
+    enabled: bool = True
+
+    def spec(self, *logical) -> P:
+        dims = []
+        for ax in logical:
+            if ax == "batch":
+                if not self.batch_axes:          # batch too small to shard
+                    dims.append(None)
+                elif len(self.batch_axes) > 1:
+                    dims.append(self.batch_axes)
+                else:
+                    dims.append(self.batch_axes[0])
+            elif ax == "model":
+                dims.append(self.model_axis)
+            else:
+                dims.append(None)
+        return P(*dims)
+
+    @property
+    def fsdp_dim(self):
+        """Mesh-axis entry for a weight dim sharded ZeRO-3 style."""
+        if not self.fsdp_axes:
+            return None
+        return self.fsdp_axes if len(self.fsdp_axes) > 1 else self.fsdp_axes[0]
+
+    def for_batch(self, global_batch: int, mesh) -> "ShardingRules":
+        """Drop batch sharding when the global batch doesn't divide the
+        data axes (e.g. the batch=1 long-context decode shape)."""
+        n = 1
+        for ax in self.batch_axes:
+            n *= mesh.shape[ax]
+        if global_batch % max(n, 1) == 0:
+            return self
+        return dataclasses.replace(self, batch_axes=())
+
+    def constrain(self, x, *logical):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(*logical))
+
+
+NO_SHARDING = ShardingRules(enabled=False)
+
+
+def tree_named_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

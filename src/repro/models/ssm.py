@@ -1,0 +1,171 @@
+"""State-space sequence mixers: selective SSM (Mamba-style, for hymba's
+parallel attn+SSM heads) and RWKV-6 "Finch" time-mix with data-dependent
+decay.
+
+Both expose a full-sequence form (lax.scan over time -- O(S) state, used
+for train/prefill) and a single-step form carrying recurrent state (used
+for decode; this is what makes `long_500k` tractable for these families).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---- selective SSM (Mamba-style) ----------------------------------------------
+
+def ssm_init(key, d_model: int, state_dim: int, expand: int, conv_width: int,
+             dtype=jnp.bfloat16):
+    di = expand * d_model
+    ks = jax.random.split(key, 6)
+    init = lambda k, shape, scale: (jax.random.normal(k, shape) * scale).astype(dtype)
+    return {
+        "in_proj": init(ks[0], (d_model, 2 * di), 0.02),
+        "conv": init(ks[1], (conv_width, di), 0.2),
+        "wdt": init(ks[2], (di,), 0.02),
+        "wB": init(ks[3], (di, state_dim), 0.02),
+        "wC": init(ks[4], (di, state_dim), 0.02),
+        # log-A parametrization keeps the recurrence stable
+        "logA": jnp.log(jnp.arange(1, state_dim + 1, dtype=jnp.float32)
+                        )[None, :].repeat(di, 0).astype(jnp.float32),
+        "out_proj": init(ks[5], (di, d_model), 0.02),
+        "dskip": jnp.ones((di,), dtype),
+    }
+
+
+def _ssm_recurrence(params, x, h0):
+    """x: (B, S, Di) post-conv activations; h0: (B, Di, N). -> (y, hT)."""
+    A = -jnp.exp(params["logA"])                               # (Di, N)
+    dt = jax.nn.softplus((x * params["wdt"]).astype(jnp.float32))
+    Bc = jnp.einsum("bsd,dn->bsn", x, params["wB"]).astype(jnp.float32)
+    Cc = jnp.einsum("bsd,dn->bsn", x, params["wC"]).astype(jnp.float32)
+
+    def step(h, t):
+        x_t, dt_t, b_t, c_t = t
+        decay = jnp.exp(dt_t[..., None] * A[None])             # (B, Di, N)
+        h = h * decay + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                 # (B, S, Di)
+    return y.astype(x.dtype), hT
+
+
+def _causal_conv(x, conv, carry=None):
+    """Depthwise causal conv. x: (B,S,Di), conv: (W,Di), carry: (B,W-1,Di)."""
+    W = conv.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv[i] for i in range(W))
+    return out, xp[:, -(W - 1):]
+
+
+def ssm_apply(params, x, state=None, conv_carry=None):
+    """x: (B, S, D). Returns (y (B,S,D), (state, conv_carry))."""
+    di = params["out_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_carry = _causal_conv(xi, params["conv"], conv_carry)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    if state is None:
+        state = jnp.zeros((x.shape[0], di, params["wB"].shape[1]), jnp.float32)
+    y, state = _ssm_recurrence(params, xi, state)
+    y = y + xi * params["dskip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"]), (state, conv_carry)
+
+
+# ---- RWKV-6 (Finch) ------------------------------------------------------------
+
+RWKV_HEAD_DIM = 64
+
+
+def rwkv_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    H = d_model // RWKV_HEAD_DIM
+    ks = jax.random.split(key, 10)
+    init = lambda k, shape, scale=0.02: (jax.random.normal(k, shape) * scale).astype(dtype)
+    return {
+        "att": {
+            "mu": init(ks[0], (5, d_model), 0.5),       # token-shift mixes r,k,v,w,g
+            "wr": init(ks[1], (d_model, d_model)),
+            "wk": init(ks[2], (d_model, d_model)),
+            "wv": init(ks[3], (d_model, d_model)),
+            "wg": init(ks[4], (d_model, d_model)),
+            "ww": init(ks[5], (d_model, d_model)),      # data-dependent decay proj
+            "w_bias": jnp.full((d_model,), -6.0, jnp.float32),
+            "u": init(ks[6], (H, RWKV_HEAD_DIM), 0.5),  # per-head bonus
+            "wo": init(ks[7], (d_model, d_model)),
+        },
+        "ffn": {
+            "mu": init(ks[8], (2, d_model), 0.5),
+            "wk": init(ks[9], (d_model, d_ff)),
+            "wv": init(jax.random.fold_in(key, 11), (d_ff, d_model)),
+            "wr": init(jax.random.fold_in(key, 12), (d_model, d_model)),
+        },
+    }
+
+
+def _token_shift(x, sx):
+    """x: (B,S,D); sx: (B,D) last token of previous chunk -> shifted x."""
+    prev = jnp.concatenate([sx[:, None, :], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def rwkv_time_mix(p, x, sx, state):
+    """RWKV6 time mixing. state: (B,H,hd,hd) f32; sx: (B,D). Returns y, sx', state'."""
+    B, S, D = x.shape
+    H = D // RWKV_HEAD_DIM
+    hd = RWKV_HEAD_DIM
+    prev, sx_new = _token_shift(x, sx)
+
+    def mix(i):
+        return x + (prev - x) * p["mu"][i]
+
+    r = jnp.einsum("bsd,de->bse", mix(0), p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", mix(1), p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", mix(2), p["wv"]).reshape(B, S, H, hd)
+    # data-dependent decay (Finch): w in (0,1) per channel per step
+    wlog = jnp.einsum("bsd,de->bse", mix(3), p["ww"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog + p["w_bias"])).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix(4), p["wg"]).astype(jnp.float32))
+
+    def step(s, t):
+        r_t, k_t, v_t, w_t = t                                  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       s + p["u"][None, :, :, None] * kv)
+        s = w_t.astype(jnp.float32)[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    y = (y * g.reshape(B, S, D)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["wo"]), sx_new, state
+
+
+def rwkv_channel_mix(p, x, sx):
+    prev, sx_new = _token_shift(x, sx)
+    xk = x + (prev - x) * p["mu"][0]
+    xr = x + (prev - x) * p["mu"][1]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]).astype(jnp.float32))
+    return (r * kv.astype(jnp.float32)).astype(x.dtype), sx_new
+
+
+def rwkv_state_init(batch: int, d_model: int):
+    H = d_model // RWKV_HEAD_DIM
+    return {
+        "wkv": jnp.zeros((batch, H, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32),
+        "sx_att": jnp.zeros((batch, d_model), jnp.bfloat16),
+        "sx_ffn": jnp.zeros((batch, d_model), jnp.bfloat16),
+    }

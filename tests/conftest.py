@@ -1,0 +1,33 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
+# single real CPU device.  Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_dlrm_pool, make_prod_pool
+from repro.sim.costsim import CostSimulator
+
+
+@pytest.fixture(scope="session")
+def dlrm_pool():
+    return make_dlrm_pool(seed=0)
+
+
+@pytest.fixture(scope="session")
+def prod_pool():
+    return make_prod_pool(seed=1)
+
+
+@pytest.fixture()
+def sim():
+    return CostSimulator(seed=0)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

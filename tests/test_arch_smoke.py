@@ -1,0 +1,107 @@
+"""Required per-architecture smoke tests: instantiate the REDUCED variant
+of each assigned architecture family (<=2 layers, d_model<=512, <=4
+experts), run one forward + one train step + one decode step on CPU, and
+assert output shapes and absence of NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.launch import steps as ST
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    nf = cfg.n_frontend_tokens if cfg.frontend else 0
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S - nf)), jnp.int32)
+    batch = {"tokens": tokens,
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if nf:
+        batch["embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, nf, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCH_NAMES)
+def test_smoke_forward_train_decode(arch):
+    cfg = C.get_smoke(arch).resolve(1)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    model = ST.build_model(cfg, remat=False, q_chunk=32, kv_chunk=32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = _batch(cfg, rng)
+
+    logits, aux = jax.jit(model.forward)(params, batch["tokens"],
+                                         batch.get("embeds"))
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt, train_step = ST.make_train_step(model, lr=1e-3)
+    p2, _, metrics = jax.jit(train_step)(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)).max()), params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+    prefill = ST.make_prefill_step(model, capacity=S)
+    logits_p, cache = jax.jit(prefill)(params, batch)
+    assert logits_p.shape == (B, 1, cfg.vocab_padded)
+    decode = ST.make_decode_step(model)
+    logits_d, cache2 = jax.jit(decode)(params, cache,
+                                       {"tokens": batch["tokens"][:, :1]})
+    assert logits_d.shape == (B, 1, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits_d).any())
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", C.ARCH_NAMES)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    expect = {
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    }[arch]
+    cfg = C.get_full(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect
+    assert cfg.source
+
+
+def test_moe_configs():
+    dbrx = C.get_full("dbrx-132b")
+    assert dbrx.moe.n_experts == 16 and dbrx.moe.top_k == 4
+    olmoe = C.get_full("olmoe-1b-7b")
+    assert olmoe.moe.n_experts == 64 and olmoe.moe.top_k == 8
+
+
+def test_long_context_support_flags():
+    assert C.supports_shape("rwkv6-1.6b", "long_500k")
+    assert C.supports_shape("hymba-1.5b", "long_500k")
+    assert C.supports_shape("h2o-danube-1.8b", "long_500k")
+    assert not C.supports_shape("qwen2.5-14b", "long_500k")
+    assert C.supports_shape("qwen2.5-14b", "decode_32k")
+
+
+def test_resolve_pads_heads():
+    cfg = C.get_full("hymba-1.5b").resolve(16)
+    assert cfg.n_heads_padded % 16 == 0
+    assert cfg.vocab_padded % 16 == 0 and cfg.vocab_padded >= cfg.vocab
+    cfg1 = C.get_full("hymba-1.5b").resolve(1)
+    assert cfg1.n_heads_padded == 25        # no padding at tp=1

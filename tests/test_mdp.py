@@ -1,0 +1,60 @@
+"""Real placement MDP semantics (paper §3.1): sparse reward, legal
+actions, measurement accounting."""
+
+import numpy as np
+
+from repro.core.mdp import RealPlacementMDP
+from repro.sim.costsim import CostSimulator
+
+
+def test_episode_semantics(dlrm_pool):
+    sim = CostSimulator(seed=0)
+    mdp = RealPlacementMDP(dlrm_pool[:8], 2, sim)
+    state = mdp.reset()
+    per_device, q = state
+    assert len(per_device) == 2 and q.shape == (2, 3)
+    assert (q == 0).all()                      # nothing placed yet
+
+    total_reward, steps = 0.0, 0
+    while not mdp.done:
+        legal = mdp.legal_actions()
+        assert legal.size >= 1
+        (pd, q), r, done = mdp.step(legal[0])
+        total_reward += r
+        steps += 1
+    assert steps == 8
+    assert total_reward < 0                    # final reward = -cost
+    assert (mdp.assignment >= 0).all()
+
+
+def test_intermediate_rewards_zero(dlrm_pool):
+    sim = CostSimulator(seed=0)
+    mdp = RealPlacementMDP(dlrm_pool[:5], 2, sim)
+    mdp.reset()
+    rewards = []
+    while not mdp.done:
+        _, r, _ = mdp.step(0)
+        rewards.append(r)
+    assert all(r == 0 for r in rewards[:-1])
+    assert rewards[-1] < 0
+
+
+def test_mdp_consumes_measurements(dlrm_pool):
+    sim = CostSimulator(seed=0)
+    before = sim.num_evaluations
+    mdp = RealPlacementMDP(dlrm_pool[:5], 2, sim)
+    mdp.reset()
+    while not mdp.done:
+        mdp.step(0)
+    # every step measures the partial placement => expensive (why the
+    # estimated MDP exists)
+    assert sim.num_evaluations - before >= 5
+
+
+def test_custom_order(dlrm_pool):
+    sim = CostSimulator(seed=0)
+    order = np.array([4, 3, 2, 1, 0])
+    mdp = RealPlacementMDP(dlrm_pool[:5], 2, sim, order=order)
+    mdp.reset()
+    mdp.step(1)
+    assert mdp.assignment[4] == 1 and mdp.assignment[0] == -1

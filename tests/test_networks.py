@@ -1,0 +1,96 @@
+"""Cost/policy network properties: the sum/max reductions must make
+predictions invariant to table order and (for the overall head) device
+order -- the mechanism behind DreamShard's generalization (paper §3.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core import networks as N
+
+
+def _setup(m=12, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    feats = rng.random((m, F.NUM_FEATURES)).astype(np.float32)
+    assign = rng.integers(0, d, m)
+    onehot = np.zeros((d, m), np.float32)
+    onehot[assign, np.arange(m)] = 1.0
+    params = N.cost_net_init(jax.random.PRNGKey(seed))
+    return params, jnp.asarray(feats), jnp.asarray(onehot), assign
+
+
+def test_cost_net_shapes():
+    params, feats, onehot, _ = _setup()
+    q, overall = N.cost_net_apply(params, feats, onehot)
+    assert q.shape == (4, 3)
+    assert overall.shape == ()
+
+
+def test_table_permutation_invariance():
+    params, feats, onehot, assign = _setup()
+    q0, c0 = N.cost_net_apply(params, feats, onehot)
+    perm = np.random.default_rng(1).permutation(feats.shape[0])
+    onehot_p = np.zeros_like(np.asarray(onehot))
+    onehot_p[assign[perm], np.arange(len(perm))] = 1.0
+    q1, c1 = N.cost_net_apply(params, feats[perm], jnp.asarray(onehot_p))
+    np.testing.assert_allclose(q0, q1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c0, c1, rtol=1e-5, atol=1e-5)
+
+
+def test_device_permutation_invariance_of_overall():
+    params, feats, onehot, _ = _setup()
+    _, c0 = N.cost_net_apply(params, feats, onehot)
+    dperm = np.array([2, 0, 3, 1])
+    _, c1 = N.cost_net_apply(params, feats, onehot[dperm])
+    np.testing.assert_allclose(c0, c1, rtol=1e-5, atol=1e-5)
+
+
+def test_generalizes_across_sizes():
+    """Same params evaluate any (M, D) -- no shape-bound weights."""
+    params = N.cost_net_init(jax.random.PRNGKey(0))
+    for m, d in [(5, 2), (30, 8), (100, 16)]:
+        rng = np.random.default_rng(m)
+        feats = jnp.asarray(rng.random((m, F.NUM_FEATURES)), jnp.float32)
+        assign = rng.integers(0, d, m)
+        onehot = np.zeros((d, m), np.float32)
+        onehot[assign, np.arange(m)] = 1.0
+        q, c = N.cost_net_apply(params, feats, jnp.asarray(onehot))
+        assert q.shape == (d, 3) and np.isfinite(float(c))
+
+
+def test_policy_logits_any_device_count():
+    params = N.policy_net_init(jax.random.PRNGKey(0))
+    for d in (2, 4, 8, 16):
+        dev = jnp.zeros((d, N.HIDDEN))
+        q = jnp.zeros((d, 3))
+        logits = N.policy_logits(params, dev, q)
+        assert logits.shape == (d,)
+
+
+def test_batched_cost_net():
+    params, feats, onehot, _ = _setup()
+    fb = jnp.stack([feats, feats])
+    ob = jnp.stack([onehot, onehot])
+    q, c = N.cost_net_apply(params, fb, ob)
+    assert q.shape == (2, 4, 3) and c.shape == (2,)
+
+
+def test_masking_ignores_padded_tables():
+    params, feats, onehot, assign = _setup()
+    m = feats.shape[0]
+    feats_pad = jnp.concatenate([feats, jnp.ones((3, F.NUM_FEATURES))])
+    onehot_pad = jnp.concatenate([onehot, jnp.zeros((4, 3))], axis=1)
+    tmask = jnp.concatenate([jnp.ones(m), jnp.zeros(3)])
+    q0, c0 = N.cost_net_apply(params, feats, onehot)
+    q1, c1 = N.cost_net_apply(params, feats_pad, onehot_pad, table_mask=tmask)
+    np.testing.assert_allclose(q0, q1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c0, c1, rtol=1e-5, atol=1e-5)
+
+
+def test_single_table_cost_sorting_finite():
+    params = N.cost_net_init(jax.random.PRNGKey(0))
+    feats = jnp.asarray(np.random.default_rng(0).random((20, F.NUM_FEATURES)),
+                        jnp.float32)
+    c = N.predict_single_table_costs(params, feats)
+    assert c.shape == (20,) and np.isfinite(np.asarray(c)).all()

@@ -1,0 +1,68 @@
+"""Optimizer sanity: convergence on quadratics, schedules, row-wise state."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adam, adamw, apply_updates, linear_decay,
+                         rowwise_adagrad, sgd)
+
+
+def _minimize(opt, steps=200):
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)),
+                               jnp.float32)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(p)
+        upd, s = opt.update(g, s, p)
+        return apply_updates(p, upd), s
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(jnp.abs(params["w"]).max())
+
+
+def test_sgd_converges():
+    assert _minimize(sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _minimize(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adam_converges():
+    assert _minimize(adam(0.05)) < 1e-2
+
+
+def test_adamw_decays_params():
+    assert _minimize(adamw(0.05, weight_decay=0.1)) < 1e-2
+
+
+def test_rowwise_adagrad_converges():
+    assert _minimize(rowwise_adagrad(0.5), steps=400) < 0.05
+
+
+def test_rowwise_state_is_per_row():
+    opt = rowwise_adagrad(0.1)
+    params = {"table": jnp.ones((10, 16))}
+    state = opt.init(params)
+    assert state.inner["table"].shape == (10,)
+
+
+def test_linear_decay_endpoints():
+    sched = linear_decay(1.0, 100)
+    assert float(sched(jnp.asarray(0))) == 1.0
+    assert float(sched(jnp.asarray(100))) == 0.0
+    assert abs(float(sched(jnp.asarray(50))) - 0.5) < 1e-6
+
+
+def test_adam_step_counts():
+    opt = adam(1e-3)
+    p = {"w": jnp.ones(3)}
+    s = opt.init(p)
+    g = {"w": jnp.ones(3)}
+    _, s = opt.update(g, s, p)
+    _, s = opt.update(g, s, p)
+    assert int(s.step) == 2

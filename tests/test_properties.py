@@ -1,0 +1,116 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines as B
+from repro.core import features as F
+from repro.data.synthetic import make_pool
+from repro.embedding.plan import build_plan
+from repro.sim.costsim import CostSimulator
+
+table_counts = st.integers(min_value=2, max_value=40)
+device_counts = st.sampled_from([1, 2, 4, 8])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _pool(n, seed, dim_mode="dlrm"):
+    return make_pool(n, seed=seed % 1000, dim_mode=dim_mode)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=table_counts, d=device_counts, seed=seeds)
+def test_expert_placement_covers_all_tables(n, d, seed):
+    pool = _pool(n, seed)
+    for s in B.EXPERT_STRATEGIES:
+        a = B.expert_place(pool, d, 1e9, s)
+        assert a.shape == (n,)
+        assert ((a >= 0) & (a < d)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=table_counts, d=device_counts, seed=seeds)
+def test_greedy_balances_better_than_worst_case(n, d, seed):
+    """Greedy max-load <= total (trivial) and >= total/d (pigeonhole)."""
+    pool = _pool(n, seed)
+    costs = pool[:, F.DIM] * pool[:, F.POOLING]
+    a = B.expert_place(pool, d, 1e9, "lookup")
+    loads = np.array([costs[a == k].sum() for k in range(d)])
+    assert loads.max() >= costs.sum() / d - 1e-9
+    # greedy LPT bound: max load <= (4/3 - 1/(3d)) * OPT <= 4/3 * total/d + max
+    assert loads.max() <= costs.sum() / d + costs.max() + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 30), d=device_counts, seed=seeds)
+def test_sim_fused_op_monotone_in_tables(n, d, seed):
+    """Adding a table to a fused op never makes it faster (per-device).
+
+    NOTE: the *overall* placement cost is legitimately non-monotone --
+    removing tables can worsen the all-to-all imbalance congestion
+    (Table 4) -- so monotonicity is asserted on the fused op itself.
+    """
+    pool = _pool(n, seed)
+    sim = CostSimulator(noise_std=0.0)
+    rng = np.random.default_rng(seed % 997)
+    a = rng.integers(0, d, n)
+    r_full = sim.evaluate(pool, a, d)
+    assert r_full.overall > 0
+    fwd_all, bwd_all = sim.fused_op_ms(pool)
+    fwd_half, bwd_half = sim.fused_op_ms(pool[: n // 2])
+    assert fwd_all >= fwd_half - 1e-9
+    assert bwd_all >= bwd_half - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 20), seed=seeds)
+def test_fused_cheaper_than_unfused(n, seed):
+    """Fusion wins on average; cache contention between co-resident tables
+    can eat at most a small fraction of the pipelining gain."""
+    pool = _pool(n, seed)
+    sim = CostSimulator(noise_std=0.0)
+    fwd, bwd = sim.fused_op_ms(pool)
+    assert fwd <= sim.single_table_ms(pool).sum() * 1.15 + 1e-9
+    assert fwd > 0 and bwd > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=table_counts, d=device_counts, seed=seeds)
+def test_plan_partitions_tables_exactly_once(n, d, seed):
+    pool = _pool(n, seed)
+    rng = np.random.default_rng(seed % 991)
+    a = rng.integers(0, d, n)
+    plan = build_plan(pool, a, d)
+    seen = plan.slot_table[plan.slot_table >= 0]
+    assert sorted(seen.tolist()) == list(range(n))
+    # arena rows never overlap: base + rows <= next base within a shard
+    for s in range(d):
+        live = plan.slot_table[s] >= 0
+        bases = plan.base_rows[s][live]
+        rows = plan.table_rows[plan.slot_table[s][live]]
+        ends = bases + rows
+        assert (bases[1:] >= ends[:-1]).all() if len(bases) > 1 else True
+        assert (ends <= plan.rows_max).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=seeds)
+def test_feature_normalization_bounded(seed):
+    pool = _pool(50, seed, dim_mode="prod")
+    norm = F.normalize_features(pool)
+    assert np.isfinite(norm).all()
+    assert (norm >= -0.01).all() and (norm <= 3.0).all()
+    # distribution bins pass through untouched and sum to 1
+    np.testing.assert_allclose(norm[:, F.DIST_START:].sum(1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, d=device_counts)
+def test_random_placement_legal_when_feasible(seed, d):
+    pool = _pool(20, seed)
+    sim = CostSimulator()
+    rng = np.random.default_rng(seed % 1009)
+    a = B.random_place(pool, d, sim.spec.mem_capacity_gb, rng)
+    total = pool[:, F.TABLE_SIZE_GB].sum()
+    if total <= d * sim.spec.mem_capacity_gb * 0.5:
+        assert sim.legal(pool, a, d)

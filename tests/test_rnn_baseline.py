@@ -1,0 +1,30 @@
+"""RNN-based RL baseline (App. D.2): trains, places legally."""
+
+import numpy as np
+
+from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig
+from repro.data.tasks import make_benchmark_suite
+from repro.sim.costsim import CostSimulator
+
+
+def test_rnn_trains_and_places(dlrm_pool):
+    sim = CostSimulator(seed=0)
+    train, test = make_benchmark_suite(dlrm_pool, n_tables=10, n_devices=2,
+                                       n_tasks=4)
+    placer = RNNPlacer(train, sim, RNNPolicyConfig(n_updates=5, n_episode=4))
+    placer.train()
+    t = test[0]
+    a = placer.place(t.raw_features, 2)
+    assert a.shape == (10,)
+    assert set(np.unique(a)) <= {0, 1}
+    assert sim.legal(t.raw_features, a, 2)
+
+
+def test_rnn_consumes_hardware_budget(dlrm_pool):
+    """Unlike DreamShard, every RNN episode costs real measurements."""
+    sim = CostSimulator(seed=0)
+    train, _ = make_benchmark_suite(dlrm_pool, n_tables=10, n_devices=2,
+                                    n_tasks=4)
+    placer = RNNPlacer(train, sim, RNNPolicyConfig(n_updates=3, n_episode=4))
+    placer.train()
+    assert sim.num_evaluations == 3 * 4

@@ -1,0 +1,96 @@
+"""Simulator invariants: fusion band, comm congestion, determinism,
+memory legality (paper App. A.3 phenomena)."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core import features as F
+from repro.sim.costsim import CostSimulator
+
+
+def test_fusion_speedup_band(dlrm_pool, sim):
+    """Fused multi-table cost vs sum of single-table costs: 1x-3x (Fig 12)."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        sub = dlrm_pool[rng.choice(len(dlrm_pool), 10, replace=False)]
+        fused_fwd, _ = sim.fused_op_ms(sub)
+        singles = sim.single_table_ms(sub).sum()
+        speedup = singles / fused_fwd
+        assert 1.0 <= speedup <= 3.2, speedup
+
+
+def test_comm_monotone_in_imbalance(sim):
+    """Table 4: more dim imbalance -> higher max comm time."""
+    maxes = []
+    for sums in ([256, 256, 256, 256], [192, 256, 320, 256],
+                 [128, 128, 384, 384], [64, 64, 64, 832]):
+        comm = sim._comm_ms(np.array(sums, float), 4)
+        maxes.append(comm.max())
+    assert all(a <= b + 1e-9 for a, b in zip(maxes, maxes[1:])), maxes
+
+
+def test_single_device_no_comm(dlrm_pool, sim):
+    res = sim.evaluate(dlrm_pool[:5], np.zeros(5, np.int64), 1)
+    assert res.bwd_comm.max() == 0.0
+    assert res.overall > 0
+
+
+def test_measurement_deterministic(dlrm_pool, sim):
+    a = np.array([0, 1, 0, 1, 2, 3, 2, 3])
+    r1 = sim.evaluate(dlrm_pool[:8], a, 4)
+    r2 = CostSimulator(seed=0).evaluate(dlrm_pool[:8], a, 4)
+    assert r1.overall == r2.overall
+    np.testing.assert_array_equal(r1.cost_features, r2.cost_features)
+
+
+def test_noise_seed_changes_measurement(dlrm_pool):
+    a = np.array([0, 1, 0, 1, 2, 3, 2, 3])
+    r1 = CostSimulator(seed=0).evaluate(dlrm_pool[:8], a, 4)
+    r2 = CostSimulator(seed=7).evaluate(dlrm_pool[:8], a, 4)
+    assert r1.overall != r2.overall
+
+
+def test_overall_is_sum_of_stage_maxima(dlrm_pool):
+    sim = CostSimulator(noise_std=0.0)
+    a = np.array([0, 1, 2, 3] * 3)
+    r = sim.evaluate(dlrm_pool[:12], a, 4)
+    expect = (r.fwd_comp.max() + r.bwd_comm.max() * 2 / 2
+              + r.bwd_comm.max() + r.bwd_comp.max())
+    # fwd comm max == bwd comm max without noise
+    assert r.overall == pytest.approx(
+        r.fwd_comp.max() + 2 * r.bwd_comm.max() + r.bwd_comp.max(), rel=1e-6)
+
+
+def test_cost_features_shape(dlrm_pool, sim):
+    a = np.array([0, 1, 0, 1])
+    r = sim.evaluate(dlrm_pool[:4], a, 2)
+    assert r.cost_features.shape == (2, 3)
+    assert (r.cost_features >= 0).all()
+
+
+def test_legality(dlrm_pool, sim):
+    big = dlrm_pool.copy()
+    big[:, F.TABLE_SIZE_GB] = 12.0     # every table exceeds an 11 GB device
+    assert not sim.legal(big[:2], np.array([0, 0]), 2)
+    assert sim.legal(dlrm_pool[:2], np.array([0, 0]), 2)
+
+
+def test_cache_hit_rate_bounds(dlrm_pool, prod_pool, sim):
+    for pool in (dlrm_pool, prod_pool):
+        hit = sim._cache_hit_rate(pool)
+        assert (hit >= 0).all() and (hit <= sim.HIT_CAP + 1e-9).all()
+        # contention: co-residence never increases hit rates
+        shared = sim._cache_hit_rate(pool[:12], shared=True)
+        alone = sim._cache_hit_rate(pool[:12], shared=False)
+        assert (shared <= alone + 1e-9).all()
+
+
+def test_expert_placements_legal(dlrm_pool, sim):
+    rng = np.random.default_rng(0)
+    sub = dlrm_pool[rng.choice(len(dlrm_pool), 40, replace=False)]
+    for s in B.EXPERT_STRATEGIES:
+        a = B.expert_place(sub, 4, sim.spec.mem_capacity_gb, s)
+        assert a.shape == (40,)
+        assert set(np.unique(a)) <= set(range(4))
+        assert sim.legal(sub, a, 4)
