@@ -1,0 +1,87 @@
+"""B4: batched ``PlacementSession`` serving throughput vs per-task ``place``.
+
+A realistic serving suite has heterogeneous table counts, and the per-task
+inference path retraces its jitted rollout for every distinct ``(M, D)``
+shape -- the dominant cost of placing a fresh suite.  The session buckets
+tasks by padded shape and decodes each bucket in one vmapped call, so a
+whole suite costs one compile per bucket (and the same assignments; the
+padded rollout is exact).
+
+Reports cold (compile-inclusive) and warm placements/sec for both paths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.api import PlacementSession
+from repro.core.trainer import DreamShard, DreamShardConfig
+from repro.data.tasks import sample_tasks, split_pool
+
+
+def make_suite(pool, n_tasks: int, n_devices: int = 4, seed: int = 0):
+    """Heterogeneous suite: table counts cycle over four sizes."""
+    _, test_ids = split_pool(pool, seed=0)
+    sizes = (18, 20, 22, 24)
+    per = max(1, n_tasks // len(sizes))
+    tasks = []
+    for i, m in enumerate(sizes):
+        tasks += sample_tasks(pool, test_ids, m, n_devices, per,
+                              seed=seed + i, name=f"suite-{m}")
+    return tasks[:n_tasks]
+
+
+def run():
+    n_tasks, _ = C.budget()
+    n_tasks = max(16, n_tasks)
+    pool = C.get_pool("DLRM")
+    sim = C.get_sim("DLRM")
+    train = make_suite(pool, 4)
+    agent = DreamShard(train, sim,
+                       DreamShardConfig(n_iterations=1, n_cost=20, n_rl=2))
+    agent.train()                      # placement quality is irrelevant here
+    tasks = make_suite(pool, n_tasks)
+    rows = []
+
+    def bench(name, fn, extra=None):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        rows.append({"variant": name, "wall_s": round(dt, 3),
+                     "placements_per_sec": round(len(tasks) / dt, 2),
+                     **(extra() if extra else {})})
+        print(rows[-1], flush=True)
+        return out, dt
+
+    # --- cold: compile-inclusive, the fresh-process serving cost ---
+    per_task = lambda: [agent.place(t.raw_features, t.n_devices)
+                        for t in tasks]
+    a_per, t_cold_per = bench("per_task_place_cold", per_task)
+
+    session = PlacementSession(agent)
+    (p_sess, t_cold_sess) = bench(
+        "session_place_many_cold", lambda: session.place_many(tasks),
+        lambda: {"compiles": session.num_compiles,
+                 "decode_calls": session.num_decode_calls})
+
+    # --- warm: steady-state serving throughput ---
+    _, t_warm_per = bench("per_task_place_warm", per_task)
+    _, t_warm_sess = bench(
+        "session_place_many_warm", lambda: session.place_many(tasks),
+        lambda: {"compiles": session.num_compiles})
+
+    same = all(np.array_equal(a, p.assignment)
+               for a, p in zip(a_per, p_sess))
+    rows.append({"variant": "summary",
+                 "identical_assignments": same,
+                 "cold_speedup": round(t_cold_per / t_cold_sess, 2),
+                 "warm_speedup": round(t_warm_per / t_warm_sess, 2)})
+    print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

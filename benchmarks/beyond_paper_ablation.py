@@ -33,8 +33,7 @@ def run():
     for name, overrides in variants.items():
         cfg = dataclasses.replace(base, **overrides)
         ds = C.train_dreamshard(train, sim, cfg)
-        cost = C.eval_strategy(
-            sim, test, lambda t: ds.place(t.raw_features, t.n_devices))
+        cost = C.eval_placer(sim, test, ds.as_placer())
         rows.append({"variant": name, "test_cost_ms": round(cost, 2),
                      "vs_lookup_expert": C.speedup(lookup, cost)})
         print(rows[-1], flush=True)

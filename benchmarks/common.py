@@ -1,5 +1,11 @@
 """Shared benchmark plumbing: strategy evaluation over task suites,
-DreamShard training at benchmark budgets, CSV row helpers."""
+DreamShard training at benchmark budgets, CSV row helpers.
+
+All strategies are evaluated through the unified ``repro.api`` layer:
+build a ``Placer`` (``agent.as_placer()``, ``rnn.as_placer()``,
+``make_baseline_placers``), then ``eval_placer(oracle, tasks, placer)``.
+No per-strategy lambda glue.
+"""
 
 from __future__ import annotations
 
@@ -7,11 +13,10 @@ import os
 import sys
 import time
 
-import numpy as np
-
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import baselines as B                      # noqa: E402
+from repro.api import (ensure_oracle, evaluate_placer,
+                       make_baseline_placers)                  # noqa: E402
 from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig   # noqa: E402
 from repro.core.trainer import DreamShard, DreamShardConfig    # noqa: E402
 from repro.data.synthetic import make_dlrm_pool, make_prod_pool  # noqa: E402
@@ -41,22 +46,16 @@ def get_sim(dataset: str, **kw):
     return CostSimulator(spec, **kw)
 
 
-def eval_strategy(sim, tasks, place_fn) -> float:
-    return float(np.mean([
-        sim.evaluate(t.raw_features, place_fn(t), t.n_devices).overall
-        for t in tasks]))
+def eval_placer(sim, tasks, placer) -> float:
+    """Mean measured cost (ms) of one ``Placer`` over a task suite."""
+    return evaluate_placer(ensure_oracle(sim), tasks, placer)
 
 
 def eval_all_baselines(sim, tasks, seed=0) -> dict:
-    rng = np.random.default_rng(seed)
-    out = {"random": eval_strategy(
-        sim, tasks, lambda t: B.random_place(
-            t.raw_features, t.n_devices, sim.spec.mem_capacity_gb, rng))}
-    for s in B.EXPERT_STRATEGIES:
-        out[s] = eval_strategy(
-            sim, tasks, lambda t, s=s: B.expert_place(
-                t.raw_features, t.n_devices, sim.spec.mem_capacity_gb, s))
-    return out
+    """Random + the four expert heuristics, via the ``Placer`` protocol."""
+    oracle = ensure_oracle(sim)
+    return {name: evaluate_placer(oracle, tasks, placer)
+            for name, placer in make_baseline_placers(oracle, seed).items()}
 
 
 def train_dreamshard(train_tasks, sim, cfg=None) -> DreamShard:

@@ -63,9 +63,8 @@ def run():
         "modeled_hw_seconds": (sim_real.num_evaluations + per_step)
         * MEASUREMENT_LATENCY_S,
         "episodes": n_updates * cfg.n_episode,
-        "final_cost_ms": round(C.eval_strategy(
-            sim_real, test[:8],
-            lambda t: real.place(t.raw_features, t.n_devices)), 2),
+        "final_cost_ms": round(C.eval_placer(sim_real, test[:8],
+                                             real.as_placer()), 2),
     })
     print(rows[-1], flush=True)
 

@@ -25,6 +25,7 @@ MODULES = [
     "table4_comm_imbalance",  # Table 4: comm vs imbalance
     "fig12_fusion",           # Fig 12: operation-fusion analysis
     "b3_reductions",          # App B.3: sum/max reduction comparison
+    "b4_session_throughput",  # PlacementSession batched serving vs per-task
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

@@ -36,10 +36,8 @@ def run():
         rnn = C.train_rnn(train, sim)
         for split, tasks in (("train", train), ("test", test)):
             scores = C.eval_all_baselines(sim, tasks)
-            scores["rnn"] = C.eval_strategy(
-                sim, tasks, lambda t: rnn.place(t.raw_features, t.n_devices))
-            scores["dreamshard"] = C.eval_strategy(
-                sim, tasks, lambda t: ds.place(t.raw_features, t.n_devices))
+            scores["rnn"] = C.eval_placer(sim, tasks, rnn.as_placer())
+            scores["dreamshard"] = C.eval_placer(sim, tasks, ds.as_placer())
             best_baseline = min(v for k, v in scores.items()
                                 if k != "dreamshard")
             rows.append({

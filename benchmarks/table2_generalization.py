@@ -32,12 +32,8 @@ def run():
         _, test_t = C.make_benchmark_suite(pool, tm, td, n_tasks=n_tasks,
                                            seed=0)
         baselines = C.eval_all_baselines(sim, test_t)
-        native = C.eval_strategy(
-            sim, test_t,
-            lambda t: agents[(tm, td)].place(t.raw_features, t.n_devices))
-        transferred = C.eval_strategy(
-            sim, test_t,
-            lambda t: agents[(sm, sd)].place(t.raw_features, t.n_devices))
+        native = C.eval_placer(sim, test_t, agents[(tm, td)].as_placer())
+        transferred = C.eval_placer(sim, test_t, agents[(sm, sd)].as_placer())
         rows.append({
             "source": f"DLRM-{sm} ({sd})", "target": f"DLRM-{tm} ({td})",
             "random": round(baselines["random"], 2),

@@ -36,10 +36,8 @@ def run():
     # w/ RNN variant = the RNN-augmented policy baseline
     rnn = C.train_rnn(train, sim)
     rows.append({"variant": "w_rnn",
-                 "train": round(C.eval_strategy(
-                     sim, train, lambda t: rnn.place(t.raw_features, d)), 2),
-                 "test": round(C.eval_strategy(
-                     sim, test, lambda t: rnn.place(t.raw_features, d)), 2)})
+                 "train": round(C.eval_placer(sim, train, rnn.as_placer()), 2),
+                 "test": round(C.eval_placer(sim, test, rnn.as_placer()), 2)})
     print(rows[-1], flush=True)
     return rows
 

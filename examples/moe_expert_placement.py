@@ -14,11 +14,10 @@ expert-parallel shards, vs the standard round-robin expert placement.
 
 import numpy as np
 
-from repro.core import baselines as B
+from repro.api import ExpertPlacer, SimOracle
 from repro.core import features as F
 from repro.core.trainer import DreamShard, DreamShardConfig
 from repro.data.tasks import Task
-from repro.sim.costsim import CostSimulator
 
 
 def experts_as_tables(n_experts, d_model, d_ff, rng):
@@ -40,25 +39,27 @@ def main():
     pools = [experts_as_tables(n_experts, d_model, d_ff,
                                np.random.default_rng(s))[0]
              for s in range(12)]
-    sim = CostSimulator(seed=0)
-    train_tasks = [Task(raw_features=p, n_devices=n_shards,
-                        table_ids=np.arange(n_experts),
-                        name=f"moe-{i}") for i, p in enumerate(pools[:8])]
+    oracle = SimOracle(seed=0)
+    train_tasks = [Task.of(p, n_shards, name=f"moe-{i}")
+                   for i, p in enumerate(pools[:8])]
 
     print("training DreamShard on expert-placement tasks...")
-    agent = DreamShard(train_tasks, sim,
+    agent = DreamShard(train_tasks, oracle,
                        DreamShardConfig(n_iterations=6, n_cost=150, n_rl=10))
     agent.train()
 
     print("\n== unseen routers (held-out) ==")
-    for i, raw in enumerate(pools[8:]):
-        ds = agent.place(raw, n_shards)
+    test_tasks = [Task.of(p, n_shards, name=f"moe-test-{i}")
+                  for i, p in enumerate(pools[8:])]
+    ds_placements = agent.as_placer().place_many(test_tasks)   # one compile
+    greedy_placer = ExpertPlacer(oracle, "lookup")
+    for i, (t, p) in enumerate(zip(test_tasks, ds_placements)):
+        raw = t.raw_features
         rr = np.arange(n_experts) % n_shards          # round-robin default
-        greedy = B.expert_place(raw, n_shards, sim.spec.mem_capacity_gb,
-                                "lookup")
-        c_ds = sim.evaluate(raw, ds, n_shards).overall
-        c_rr = sim.evaluate(raw, rr, n_shards).overall
-        c_gr = sim.evaluate(raw, greedy, n_shards).overall
+        c_ds = oracle.evaluate(raw, p.assignment, n_shards).overall
+        c_rr = oracle.evaluate(raw, rr, n_shards).overall
+        c_gr = oracle.evaluate(raw, greedy_placer.place(t).assignment,
+                               n_shards).overall
         print(f"  router {i}: round-robin {c_rr:6.2f}  greedy {c_gr:6.2f}  "
               f"dreamshard {c_ds:6.2f}  ({(c_rr / c_ds - 1) * 100:+.1f}% vs rr)")
 

@@ -1,52 +1,46 @@
 """Quickstart: train a DreamShard placer on synthetic DLRM tables and
-compare it against the human-expert strategies on unseen tables.
+compare it against the human-expert strategies on unseen tables -- all
+through the unified ``repro.api`` placement interface.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core import baselines as B
+from repro.api import SimOracle, evaluate_placer, make_baseline_placers
 from repro.core.trainer import DreamShard, DreamShardConfig
 from repro.data.synthetic import make_dlrm_pool
 from repro.data.tasks import make_benchmark_suite
-from repro.sim.costsim import CostSimulator
 
 
 def main():
     pool = make_dlrm_pool(seed=0)                 # 856 synthetic tables
-    sim = CostSimulator(seed=0)                   # the "hardware"
+    oracle = SimOracle(seed=0)                    # the "hardware"
     train_tasks, test_tasks = make_benchmark_suite(
         pool, n_tables=50, n_devices=4, n_tasks=20)
 
     print("training DreamShard on DLRM-50 (4 GPUs)...")
-    agent = DreamShard(train_tasks, sim, DreamShardConfig())
+    agent = DreamShard(train_tasks, oracle, DreamShardConfig())
     agent.train(eval_tasks=test_tasks[:5], log=True)
 
     print("\n== held-out test tasks (unseen tables) ==")
-    rng = np.random.default_rng(0)
-    cap = sim.spec.mem_capacity_gb
-    rows = {"random": lambda t: B.random_place(t.raw_features, t.n_devices,
-                                               cap, rng)}
-    for s in B.EXPERT_STRATEGIES:
-        rows[s] = lambda t, s=s: B.expert_place(t.raw_features, t.n_devices,
-                                                cap, s)
-    rows["dreamshard"] = lambda t: agent.place(t.raw_features, t.n_devices)
+    placers = make_baseline_placers(oracle, seed=0)
+    placers["dreamshard"] = agent.as_placer()     # batched PlacementSession
     base = None
-    for name, fn in rows.items():
-        cost = np.mean([sim.evaluate(t.raw_features, fn(t),
-                                     t.n_devices).overall
-                        for t in test_tasks])
+    for name, placer in placers.items():
+        cost = evaluate_placer(oracle, test_tasks, placer)
         base = base or cost
         print(f"  {name:12s} {cost:7.2f} ms   ({(base / cost - 1) * 100:+.1f}%"
               " vs random)")
 
-    # one concrete placement, end to end
+    # one concrete placement, end to end, with provenance + physical plan
     t = test_tasks[0]
-    placement = agent.place(t.raw_features, t.n_devices)
+    p = placers["dreamshard"].place(t)
+    measured = oracle.evaluate(t.raw_features, p.assignment,
+                               t.n_devices).overall
     print(f"\nplacement for task 0 ({t.n_tables} tables on"
-          f" {t.n_devices} devices): {placement.tolist()}")
-    print(f"cost: {sim.evaluate(t.raw_features, placement, t.n_devices).overall:.2f} ms")
+          f" {t.n_devices} devices): {p.assignment.tolist()}")
+    print(f"strategy={p.strategy} candidates={p.candidates} "
+          f"estimated {p.est_cost_ms:.2f} ms, measured {measured:.2f} ms; "
+          f"plan: {p.plan.n_shards} shards x {p.plan.k_max} table slots")
 
 
 if __name__ == "__main__":

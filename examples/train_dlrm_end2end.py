@@ -4,8 +4,9 @@ DreamShard placement against a random placement end to end.
 
 The model is ~100M params at full table sizes; on CPU we shrink hash sizes
 (CLI flags) while keeping the full pipeline: synthetic click-through data
--> DreamShard placement -> PlacementPlan -> sharded embedding + dense
-MLPs -> row-wise Adagrad on arenas + Adam on the dense nets.
+-> ``Placer`` -> ``Placement`` (assignment + physical plan) -> sharded
+embedding + dense MLPs -> row-wise Adagrad on arenas + Adam on the dense
+nets.
 
   PYTHONPATH=src python examples/train_dlrm_end2end.py --steps 200
 """
@@ -17,16 +18,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as B
+from repro.api import RandomPlacer, SimOracle
 from repro.core import features as F
 from repro.core.trainer import DreamShard, DreamShardConfig
 from repro.data.synthetic import make_dlrm_pool
-from repro.data.tasks import make_benchmark_suite
+from repro.data.tasks import Task, make_benchmark_suite
 from repro.embedding import sharded as E
-from repro.embedding.plan import build_plan
 from repro.models.dlrm import DLRM, DLRMConfig
 from repro.optim import adam, apply_updates, rowwise_adagrad
-from repro.sim.costsim import CostSimulator
 
 
 def synth_batch(rng, plan, raw, batch, n_dense, pool_max=6):
@@ -44,9 +43,11 @@ def synth_batch(rng, plan, raw, batch, n_dense, pool_max=6):
             jnp.asarray(labels))
 
 
-def train_with_placement(name, raw, assignment, n_shards, args, sim):
-    plan = build_plan(raw, assignment, n_shards)
-    cost = sim.evaluate(raw, assignment, n_shards).overall
+def train_with_placement(name, task, placement, args, oracle):
+    plan = placement.plan                     # physical layout, ready-made
+    raw = task.raw_features
+    cost = oracle.evaluate(raw, placement.assignment,
+                           placement.n_devices).overall
     cfg = DLRMConfig(n_dense_features=13, embed_dim=plan.dim,
                      bottom_mlp=(128, 64), top_mlp=(256, 128, 64),
                      n_tables=raw.shape[0])
@@ -100,28 +101,27 @@ def main():
     args = ap.parse_args()
 
     pool = make_dlrm_pool(seed=0)
-    sim = CostSimulator(seed=0)
+    oracle = SimOracle(seed=0)
     raw = pool[: args.tables].copy()
     raw[:, F.HASH_SIZE] = np.clip(raw[:, F.HASH_SIZE], 100, args.max_rows)
     raw[:, F.TABLE_SIZE_GB] = F.table_size_gb(raw[:, F.DIM],
                                               raw[:, F.HASH_SIZE])
+    task = Task.of(raw, args.shards, name="dlrm-end2end")
 
     print("training DreamShard placer (small budget)...")
     train_tasks, _ = make_benchmark_suite(pool, args.tables, args.shards,
                                           n_tasks=8)
-    agent = DreamShard(train_tasks, sim,
+    agent = DreamShard(train_tasks, oracle,
                        DreamShardConfig(n_iterations=5, n_cost=150, n_rl=10))
     agent.train()
-    ds_assign = agent.place(raw, args.shards)
-    rnd_assign = B.random_place(raw, args.shards, sim.spec.mem_capacity_gb,
-                                np.random.default_rng(0))
+    ds_placement = agent.as_placer().place(task)
+    rnd_placement = RandomPlacer(oracle, seed=0).place(task)
 
     print("\n== DLRM end-to-end with DreamShard placement ==")
-    c1, _ = train_with_placement("dreamshard", raw, ds_assign, args.shards,
-                                 args, sim)
+    c1, _ = train_with_placement("dreamshard", task, ds_placement, args,
+                                 oracle)
     print("== DLRM end-to-end with random placement ==")
-    c2, _ = train_with_placement("random", raw, rnd_assign, args.shards,
-                                 args, sim)
+    c2, _ = train_with_placement("random", task, rnd_placement, args, oracle)
     print(f"\nembedding step cost: dreamshard {c1:.2f} ms vs random "
           f"{c2:.2f} ms  ({(c2 / c1 - 1) * 100:+.1f}%)")
 

@@ -1,0 +1,30 @@
+"""Public placement API.
+
+One interface over every placement strategy and cost backend:
+
+* ``CostOracle`` (protocol) with ``SimOracle`` / ``CachedOracle`` /
+  ``KernelOracle`` implementations -- `evaluate(raw, assignment,
+  n_devices) -> SimResult` plus `mem_capacity_gb` / `num_evaluations`;
+* ``Placer`` (protocol) + ``Placement`` (assignment, physical
+  ``PlacementPlan``, estimated cost, provenance) with adapters for
+  DreamShard, the RNN baseline, expert heuristics, and random;
+* ``PlacementSession`` -- batched DreamShard serving: tasks bucketed by
+  padded ``(M, D)`` shape, many tasks decoded per jitted call.
+
+See ``docs/api.md`` for usage and the migration guide.
+"""
+
+from repro.api.oracle import (CachedOracle, CostOracle, KernelOracle,
+                              SimOracle, ensure_oracle)
+from repro.api.placement import (BasePlacer, Placement, Placer,
+                                 evaluate_placements, evaluate_placer)
+from repro.api.placers import (DreamShardPlacer, ExpertPlacer, RNNPlacerAdapter,
+                               RandomPlacer, make_baseline_placers)
+from repro.api.session import PlacementSession
+
+__all__ = [
+    "BasePlacer", "CachedOracle", "CostOracle", "DreamShardPlacer",
+    "ExpertPlacer", "KernelOracle", "Placement", "PlacementSession", "Placer",
+    "RNNPlacerAdapter", "RandomPlacer", "SimOracle", "ensure_oracle",
+    "evaluate_placements", "evaluate_placer", "make_baseline_placers",
+]

@@ -1,0 +1,218 @@
+"""Cost oracles: the unified "how expensive is this placement?" seam.
+
+Every placement strategy and benchmark talks to hardware through a
+``CostOracle``:
+
+* ``SimOracle``    -- wraps the analytic ``CostSimulator`` (the default
+  "hardware" of the reproduction);
+* ``CachedOracle`` -- memoizes repeated placement queries on the
+  deterministic ``placement_digest`` so benchmark sweeps and greedy
+  searches never pay twice for the same placement;
+* ``KernelOracle`` -- measured-cost seam: times the real
+  ``kernels/embedding_bag`` lookup per device group and models the
+  all-to-all analytically, the hook *Pre-train and Search*-style
+  deployments plug real measurements into.
+
+The trainer (``DreamShard``), the RNN baseline, and every ``Placer``
+adapter accept either a ``CostOracle`` or a bare ``CostSimulator``
+(auto-wrapped via ``ensure_oracle``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.sim.costsim import (CostSimulator, SimResult, placement_bytes,
+                               placement_digest)
+from repro.sim.hardware import HardwareSpec, PAPER_GPU
+
+
+@runtime_checkable
+class CostOracle(Protocol):
+    """Protocol every cost backend implements."""
+
+    @property
+    def mem_capacity_gb(self) -> float:
+        """Per-device memory budget a legal placement must respect."""
+        ...
+
+    @property
+    def num_evaluations(self) -> int:
+        """Hardware measurements consumed so far (sample-efficiency axis)."""
+        ...
+
+    def evaluate(self, raw: np.ndarray, assignment: np.ndarray,
+                 n_devices: int) -> SimResult:
+        """Measure one placement; the analogue of one benchmark run."""
+        ...
+
+
+def ensure_oracle(sim_or_oracle) -> "CostOracle":
+    """Accept a ``CostOracle`` or a bare ``CostSimulator`` (auto-wrap)."""
+    if isinstance(sim_or_oracle, CostSimulator):
+        return SimOracle(sim_or_oracle)
+    if isinstance(sim_or_oracle, CostOracle):
+        return sim_or_oracle
+    raise TypeError(
+        f"expected a CostOracle or CostSimulator, got {type(sim_or_oracle)!r}")
+
+
+class SimOracle:
+    """``CostOracle`` view over the analytic ``CostSimulator``."""
+
+    def __init__(self, sim: CostSimulator | None = None, **sim_kwargs):
+        self.sim = sim if sim is not None else CostSimulator(**sim_kwargs)
+
+    @property
+    def mem_capacity_gb(self) -> float:
+        return self.sim.spec.mem_capacity_gb
+
+    @property
+    def num_evaluations(self) -> int:
+        return self.sim.num_evaluations
+
+    def evaluate(self, raw, assignment, n_devices) -> SimResult:
+        return self.sim.evaluate(raw, assignment, n_devices)
+
+    def legal(self, raw, assignment, n_devices) -> bool:
+        return self.sim.legal(raw, assignment, n_devices)
+
+
+class CachedOracle:
+    """Memoizing wrapper: repeated placements are served from cache.
+
+    Keys are a deterministic digest of the raw features, the assignment,
+    and the device count (the shared ``placement_bytes`` stream that also
+    feeds ``placement_digest``, but hashed wide -- blake2b-128 -- so the
+    cache is collision-safe at any sweep size).  Hit/miss behaviour is
+    reproducible across processes.  ``num_evaluations`` reports the
+    *inner* oracle's count -- cache hits consume no hardware budget.
+    """
+
+    def __init__(self, inner, max_entries: int = 100_000):
+        self.inner = ensure_oracle(inner)
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self._cache: dict[bytes, SimResult] = {}
+
+    @property
+    def mem_capacity_gb(self) -> float:
+        return self.inner.mem_capacity_gb
+
+    @property
+    def num_evaluations(self) -> int:
+        return self.inner.num_evaluations
+
+    def _key(self, raw, assignment, n_devices) -> bytes:
+        import hashlib
+        return hashlib.blake2b(
+            placement_bytes(raw, assignment, n_devices),
+            digest_size=16).digest()
+
+    def evaluate(self, raw, assignment, n_devices) -> SimResult:
+        key = self._key(raw, assignment, n_devices)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        res = self.inner.evaluate(raw, assignment, n_devices)
+        if len(self._cache) >= self.max_entries:      # FIFO eviction
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = res
+        return res
+
+
+class KernelOracle:
+    """Measured-cost oracle stub backed by the ``embedding_bag`` kernel.
+
+    For each device group this oracle builds a small arena, synthesizes
+    zipf-ish lookup indices, and *times* the fused embedding-bag forward
+    and its scatter-add backward (the Pallas kernel on TPU, the jnp
+    reference in interpret/CPU mode).  Communication has no single-host
+    analogue, so the all-to-all stage reuses the analytic model.
+
+    This is deliberately a seam, not a production harness: batch and
+    arena rows are capped so one ``evaluate`` stays cheap on CPU, and
+    measured milliseconds are comparable *within* one oracle, not with
+    ``SimOracle`` numbers.
+    """
+
+    def __init__(self, spec: HardwareSpec = PAPER_GPU, batch_size: int = 64,
+                 pooling: int = 4, max_rows: int = 4096, repeats: int = 2,
+                 use_pallas: bool = False, seed: int = 0):
+        self.spec = spec
+        self.batch_size = batch_size
+        self.pooling = pooling
+        self.max_rows = max_rows
+        self.repeats = repeats
+        self.use_pallas = use_pallas
+        self.seed = seed
+        self._num_evaluations = 0
+        # analytic comm model shared with the simulator (deterministic)
+        self._comm_model = CostSimulator(spec, noise_std=0.0)
+
+    @property
+    def mem_capacity_gb(self) -> float:
+        return self.spec.mem_capacity_gb
+
+    @property
+    def num_evaluations(self) -> int:
+        return self._num_evaluations
+
+    def _time_ms(self, fn, *args) -> float:
+        fn(*args).block_until_ready()            # warmup / compile
+        best = float("inf")
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
+    def evaluate(self, raw, assignment, n_devices) -> SimResult:
+        import jax.numpy as jnp
+        from repro.core import features as F
+        from repro.kernels.embedding_bag.ref import (embedding_bag_grad_ref,
+                                                     embedding_bag_ref)
+        if self.use_pallas:
+            from repro.kernels.embedding_bag.ops import embedding_bag
+        self._num_evaluations += 1
+        raw = np.asarray(raw, dtype=np.float64)
+        assignment = np.asarray(assignment)
+        rng = np.random.default_rng(
+            placement_digest(raw, assignment, n_devices) ^ self.seed)
+        dim = max(128, int(np.ceil(raw[:, F.DIM].max() / 128) * 128))
+        fwd = np.zeros(n_devices)
+        bwd = np.zeros(n_devices)
+        dim_sums = np.zeros(n_devices)
+        for d in range(n_devices):
+            sub = raw[assignment == d]
+            if sub.shape[0] == 0:
+                continue
+            rows = np.minimum(sub[:, F.HASH_SIZE].astype(np.int64),
+                              self.max_rows)
+            bases = np.concatenate([[1], 1 + np.cumsum(rows)[:-1]])
+            arena = jnp.zeros((1 + int(rows.sum()), dim), jnp.float32)
+            idx = np.zeros((self.batch_size * len(rows), self.pooling),
+                           np.int32)
+            for k, (b, r) in enumerate(zip(bases, rows)):
+                draws = rng.zipf(1.5, size=(self.batch_size, self.pooling))
+                lo = k * self.batch_size
+                idx[lo:lo + self.batch_size] = b + draws % r
+            idx = jnp.asarray(idx)
+            if self.use_pallas:
+                fwd[d] = self._time_ms(embedding_bag, arena, idx)
+            else:
+                fwd[d] = self._time_ms(embedding_bag_ref, arena, idx)
+            g = jnp.ones((idx.shape[0], dim), jnp.float32)
+            bwd[d] = self._time_ms(embedding_bag_grad_ref, arena.shape, idx, g)
+            dim_sums[d] = sub[:, F.DIM].sum()
+        comm = self._comm_model._comm_ms(dim_sums, n_devices)
+        fwd_comm = (fwd.max() - fwd) + comm
+        overall = fwd.max() + 2.0 * comm.max() + bwd.max()
+        return SimResult(fwd_comp=fwd, bwd_comp=bwd, fwd_comm=fwd_comm,
+                         bwd_comm=comm, overall=float(overall))

@@ -1,0 +1,95 @@
+"""The unified placement interface: ``Placer`` protocol + ``Placement``.
+
+A ``Placer`` turns a ``Task`` (table subset + device count) into a
+``Placement``: the assignment vector, the physical ``PlacementPlan`` the
+sharded embedding op consumes, the strategy's own cost estimate (when it
+has one), and provenance -- which strategy produced it, how many candidate
+placements were ranked, and how many hardware oracle evaluations were
+consumed.  Every strategy in the repo (DreamShard, the RNN baseline, the
+expert heuristics, random) is exposed through this one interface, so
+benchmarks and examples compare strategies without per-strategy glue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.data.tasks import Task
+from repro.embedding.plan import PlacementPlan, build_plan
+
+
+@dataclasses.dataclass
+class Placement:
+    """One strategy's answer for one task, with provenance."""
+
+    assignment: np.ndarray          # (M,) table -> device
+    plan: PlacementPlan             # physical layout for the sharded op
+    n_devices: int
+    strategy: str                   # producing Placer's name
+    est_cost_ms: float | None = None   # strategy's own (hardware-free) estimate
+    candidates: int = 1             # candidate placements ranked internally
+    oracle_evals: int = 0           # hardware evaluations consumed producing it
+
+    @property
+    def n_tables(self) -> int:
+        return self.assignment.shape[0]
+
+
+@runtime_checkable
+class Placer(Protocol):
+    """Protocol every placement strategy implements."""
+
+    name: str
+
+    def place(self, task: Task) -> Placement:
+        """Place one task."""
+        ...
+
+    def place_many(self, tasks: Iterable[Task]) -> list[Placement]:
+        """Place a suite of tasks (batched/amortized where possible)."""
+        ...
+
+
+class BasePlacer:
+    """Shared plumbing: subclasses implement ``_assign``.
+
+    ``_assign(task) -> (assignment, est_cost_ms, candidates, oracle_evals)``
+    """
+
+    name = "base"
+
+    def _assign(self, task: Task):
+        raise NotImplementedError
+
+    def _wrap(self, task: Task, assignment: np.ndarray,
+              est_cost_ms: float | None = None, candidates: int = 1,
+              oracle_evals: int = 0) -> Placement:
+        assignment = np.asarray(assignment, dtype=np.int64)
+        plan = build_plan(task.raw_features, assignment, task.n_devices)
+        return Placement(assignment=assignment, plan=plan,
+                         n_devices=task.n_devices, strategy=self.name,
+                         est_cost_ms=est_cost_ms, candidates=candidates,
+                         oracle_evals=oracle_evals)
+
+    def place(self, task: Task) -> Placement:
+        return self._wrap(task, *self._assign(task))
+
+    def place_many(self, tasks: Iterable[Task]) -> list[Placement]:
+        return [self.place(t) for t in tasks]
+
+
+def evaluate_placements(oracle, tasks: Iterable[Task],
+                        placements: Iterable[Placement]) -> float:
+    """Mean measured cost (ms) of placements over their tasks."""
+    costs = [oracle.evaluate(t.raw_features, p.assignment, t.n_devices).overall
+             for t, p in zip(tasks, placements)]
+    return float(np.mean(costs))
+
+
+def evaluate_placer(oracle, tasks: Iterable[Task], placer: Placer) -> float:
+    """Place a suite through one ``Placer`` and return its mean cost (ms)."""
+    tasks = list(tasks)           # survive generators: placed AND re-zipped
+    return evaluate_placements(oracle, tasks, placer.place_many(tasks))

@@ -1,0 +1,98 @@
+"""``Placer`` adapters for every placement strategy in the repo.
+
+All four strategy families -- the trained DreamShard agent, the RNN
+baseline, the human-expert greedy heuristics, and random -- are exposed
+through the same ``Placer`` protocol, so suites, benchmarks, and examples
+iterate over strategies without per-strategy lambda glue.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api.oracle import ensure_oracle
+from repro.api.placement import BasePlacer, Placement
+from repro.api.session import PlacementSession
+from repro.core import baselines as B
+from repro.data.tasks import Task
+
+
+class DreamShardPlacer(BasePlacer):
+    """Trained DreamShard agent behind the ``Placer`` protocol.
+
+    Both ``place`` and ``place_many`` route through a shared
+    ``PlacementSession``: a whole suite decodes with one compile per shape
+    bucket, single-task calls reuse those bucket traces, and the decoded
+    assignments are identical to the agent's per-task Algorithm-2 path
+    (verified in ``tests/test_api.py``).
+    """
+
+    name = "dreamshard"
+
+    def __init__(self, agent, n_candidates: int | None = None,
+                 bucket_tables: int = 8):
+        self.agent = agent
+        self.session = PlacementSession(agent, n_candidates=n_candidates,
+                                        bucket_tables=bucket_tables)
+
+    def place(self, task: Task) -> Placement:
+        return self.session.place(task)       # reuses bucket traces
+
+    def place_many(self, tasks) -> list[Placement]:
+        return self.session.place_many(list(tasks))
+
+
+class RNNPlacerAdapter(BasePlacer):
+    """RNN REINFORCE baseline (App. D.2) behind the ``Placer`` protocol."""
+
+    name = "rnn"
+
+    def __init__(self, rnn_placer):
+        self.rnn = rnn_placer
+
+    def _assign(self, task: Task):
+        a = self.rnn.place(task.raw_features, task.n_devices)
+        return a, None, 1, 0
+
+
+class ExpertPlacer(BasePlacer):
+    """Greedy human-expert heuristic (paper App. D.1): one scalar cost per
+    table, sorted descending, least-loaded legal device."""
+
+    def __init__(self, oracle, strategy: str):
+        if strategy not in B.EXPERT_STRATEGIES:
+            raise ValueError(f"unknown expert strategy {strategy!r}")
+        self.oracle = ensure_oracle(oracle)
+        self.strategy = strategy
+        self.name = strategy
+
+    def place(self, task: Task) -> Placement:
+        a = B.expert_place(task.raw_features, task.n_devices,
+                           self.oracle.mem_capacity_gb, self.strategy)
+        return self._wrap(task, a)
+
+
+class RandomPlacer(BasePlacer):
+    """Memory-legal random placement (stateful rng, like the legacy helper:
+    successive calls consume the same stream as ``random_place`` with a
+    shared generator)."""
+
+    name = "random"
+
+    def __init__(self, oracle, seed: int = 0):
+        self.oracle = ensure_oracle(oracle)
+        self.rng = np.random.default_rng(seed)
+
+    def place(self, task: Task) -> Placement:
+        a = B.random_place(task.raw_features, task.n_devices,
+                           self.oracle.mem_capacity_gb, self.rng)
+        return self._wrap(task, a)
+
+
+def make_baseline_placers(oracle, seed: int = 0) -> dict[str, BasePlacer]:
+    """Random + the four expert heuristics, keyed by strategy name."""
+    oracle = ensure_oracle(oracle)
+    placers: dict[str, BasePlacer] = {"random": RandomPlacer(oracle, seed)}
+    for s in B.EXPERT_STRATEGIES:
+        placers[s] = ExpertPlacer(oracle, s)
+    return placers

@@ -1,0 +1,147 @@
+"""Batched DreamShard serving: decode many tasks per jitted call.
+
+``DreamShard.place`` retraces its rollout for every distinct table count
+``M`` (and device count ``D``) -- a 50-task suite with heterogeneous sizes
+pays tens of XLA compiles.  ``PlacementSession`` instead buckets tasks by
+padded ``(M_pad, D)`` shape, pads each task's (sorted) features to the
+bucket's table count with masked rows, and decodes the whole bucket in ONE
+vmapped+jitted call: one compile per (bucket shape, power-of-two batch
+size), amortized across every task in the bucket and every future
+``place_many`` call on the session.
+
+The padded rollout is exact, not approximate: masked rows contribute
+nothing to the policy/cost device sums or memory, and the candidate key
+schedule matches ``DreamShard.place``, so the session returns the *same*
+assignments as per-task ``place`` -- just much faster (see
+``benchmarks/b4_session_throughput.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.placement import Placement
+from repro.core import features as FEAT
+from repro.core import rollout as R
+from repro.data.tasks import Task
+from repro.embedding.plan import build_plan
+
+
+class PlacementSession:
+    """Long-lived serving handle for one trained DreamShard agent.
+
+    Parameters
+    ----------
+    agent: a ``DreamShard`` (trained or not; uses its current networks).
+    n_candidates: candidate placements ranked per task (default: the
+        agent's ``inference_candidates``).
+    bucket_tables: bucket granularity -- table counts are padded up to the
+        next multiple, trading a little padded compute for far fewer
+        compiles across heterogeneous suites.
+    """
+
+    def __init__(self, agent, n_candidates: int | None = None,
+                 bucket_tables: int = 8):
+        self.agent = agent
+        self._n_candidates_override = n_candidates
+        self.bucket_tables = max(1, bucket_tables)
+        self.num_compiles = 0          # distinct bucket shapes traced
+        self.num_decode_calls = 0      # jitted decode invocations
+        self._decode_fns: dict[tuple, callable] = {}
+
+    @property
+    def n_candidates(self) -> int:
+        """Candidates ranked per task -- read live from the agent's config
+        (unless overridden) so a config change, e.g. via ``restore``, never
+        lets the session drift from per-task ``place``."""
+        if self._n_candidates_override is not None:
+            return self._n_candidates_override
+        return self.agent.cfg.inference_candidates
+
+    # ---- bucketing -----------------------------------------------------------
+
+    def _pad_tables(self, m: int) -> int:
+        b = self.bucket_tables
+        return int(np.ceil(m / b) * b)
+
+    def bucket_key(self, task: Task) -> tuple[int, int]:
+        return (self._pad_tables(task.n_tables), task.n_devices)
+
+    def _decode_fn(self, m_pad: int, n_devices: int, b_pad: int):
+        cfg = self.agent.cfg
+        # cfg-derived statics are part of the key: a config change on a
+        # live agent (e.g. restore()) must not serve stale traces
+        key = (m_pad, n_devices, self.n_candidates, b_pad,
+               cfg.use_cost_features, cfg.reward_mode, self.agent._log_targets)
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            self.num_compiles += 1
+            decode = functools.partial(
+                R.decode_candidates, n_devices=n_devices,
+                n_candidates=self.n_candidates,
+                use_cost=cfg.use_cost_features, reward_mode=cfg.reward_mode,
+                log_targets=self.agent._log_targets)
+
+            @jax.jit
+            def fn(policy_params, cost_params, feats, sizes, tmask, cap):
+                def one(f, s, m):
+                    return decode(policy_params, cost_params, f, s, cap,
+                                  tmask=m)
+                return jax.vmap(one)(feats, sizes, tmask)
+
+            self._decode_fns[key] = fn
+        return fn
+
+    # ---- serving -------------------------------------------------------------
+
+    def place_many(self, tasks: list[Task]) -> list[Placement]:
+        """Place a suite, decoding each ``(M_pad, D)`` bucket in one call."""
+        tasks = list(tasks)
+        buckets: dict[tuple, list[int]] = {}
+        for i, t in enumerate(tasks):
+            buckets.setdefault(self.bucket_key(t), []).append(i)
+
+        out: list[Placement | None] = [None] * len(tasks)
+        for (m_pad, n_devices), idxs in buckets.items():
+            B = len(idxs)
+            # pad the batch dim to a power of two with fully-masked rows so
+            # differently-sized calls into the same bucket reuse one trace
+            b_pad = 1 << max(0, B - 1).bit_length()
+            feats = np.zeros((b_pad, m_pad, FEAT.NUM_FEATURES), np.float32)
+            sizes = np.zeros((b_pad, m_pad), np.float32)
+            tmask = np.zeros((b_pad, m_pad), np.float32)
+            orders = []
+            for j, i in enumerate(idxs):
+                f, s, order = self.agent._inference_inputs(
+                    tasks[i].raw_features)
+                m = f.shape[0]
+                feats[j, :m] = f[order]
+                sizes[j, :m] = s[order]
+                tmask[j, :m] = 1.0
+                orders.append(order)
+            fn = self._decode_fn(m_pad, n_devices, b_pad)
+            actions, est = fn(self.agent.policy_params,
+                              self.agent.cost_params, jnp.asarray(feats),
+                              jnp.asarray(sizes), jnp.asarray(tmask),
+                              self.agent.oracle.mem_capacity_gb)
+            self.num_decode_calls += 1
+            actions, est = np.asarray(actions), np.asarray(est)
+            for j, i in enumerate(idxs):
+                t, order = tasks[i], orders[j]
+                best = int(np.argmin(est[j]))
+                assignment = np.empty(t.n_tables, dtype=np.int64)
+                assignment[order] = actions[j, best, :t.n_tables]
+                out[i] = Placement(
+                    assignment=assignment,
+                    plan=build_plan(t.raw_features, assignment, n_devices),
+                    n_devices=n_devices, strategy="dreamshard",
+                    est_cost_ms=float(est[j, best]),
+                    candidates=self.n_candidates, oracle_evals=0)
+        return out
+
+    def place(self, task: Task) -> Placement:
+        return self.place_many([task])[0]

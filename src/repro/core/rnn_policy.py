@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.oracle import CostOracle, ensure_oracle
 from repro.core import features as F
 from repro.core import networks as N
 from repro.core import rollout as R
@@ -87,10 +88,11 @@ class RNNPolicyConfig:
 class RNNPlacer:
     """REINFORCE on real measurements; matched hardware budget vs DreamShard."""
 
-    def __init__(self, train_tasks: list[Task], sim: CostSimulator,
+    def __init__(self, train_tasks: list[Task],
+                 oracle: CostOracle | CostSimulator,
                  config: RNNPolicyConfig | None = None):
         self.tasks = train_tasks
-        self.sim = sim
+        self.oracle = ensure_oracle(oracle)
         self.cfg = config or RNNPolicyConfig()
         self.rng = np.random.default_rng(self.cfg.seed)
         key = jax.random.PRNGKey(self.cfg.seed)
@@ -139,7 +141,7 @@ class RNNPlacer:
         return self._grad_fns[sig]
 
     def train(self, log: bool = False):
-        cap = self.sim.spec.mem_capacity_gb
+        cap = self.oracle.mem_capacity_gb
         for step in range(self.cfg.n_updates):
             task = self.tasks[self.rng.integers(len(self.tasks))]
             feats = jnp.asarray(F.normalize_features(task.raw_features))
@@ -149,7 +151,8 @@ class RNNPlacer:
             actions = np.asarray(sample(self.params, feats, sizes, cap,
                                         self._next_key()))
             rewards = np.array([
-                -self.sim.evaluate(task.raw_features, a, task.n_devices).overall
+                -self.oracle.evaluate(task.raw_features, a,
+                                      task.n_devices).overall
                 for a in actions])
             adv = (rewards - rewards.mean()) / 10.0   # same 10ms scaling
             grads = self._grad_fn(task.n_devices, self.cfg.n_episode)(
@@ -167,5 +170,10 @@ class RNNPlacer:
         sizes = jnp.asarray(raw_features[:, F.TABLE_SIZE_GB].astype(np.float32))
         sample = self._sample_fn(n_devices, 1, True)
         actions = sample(self.params, feats, sizes,
-                         self.sim.spec.mem_capacity_gb, jax.random.PRNGKey(0))
+                         self.oracle.mem_capacity_gb, jax.random.PRNGKey(0))
         return np.asarray(actions[0])
+
+    def as_placer(self):
+        """This baseline behind the unified ``repro.api.Placer`` protocol."""
+        from repro.api.placers import RNNPlacerAdapter
+        return RNNPlacerAdapter(self)

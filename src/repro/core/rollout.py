@@ -63,17 +63,26 @@ def estimate_overall(cost_params, dev_cost, reward_mode: str,
 
 def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
                   n_devices, n_episodes, greedy, use_cost, actions_in=None,
-                  reward_mode="composed", log_targets=True):
-    """Shared core.  If actions_in is given (E, M), replay those actions."""
+                  reward_mode="composed", log_targets=True, tmask=None):
+    """Shared core.  If actions_in is given (E, M), replay those actions.
+
+    ``tmask`` (M,) marks valid tables (1.0) vs padding rows (0.0): padded
+    steps still run but contribute nothing to the device sums, memory, or
+    log-prob/entropy totals, so a task padded to a bucket shape decodes to
+    exactly the placement of its unpadded rollout (PlacementSession).  With
+    ``tmask=None`` the computation is bit-identical to the unmasked
+    original (no extra multiplies are traced).
+    """
     M = h_pol.shape[0]
     H = h_pol.shape[1]
     E, D = n_episodes, n_devices
     replay = actions_in is not None
+    masked = tmask is not None
     acts = jnp.swapaxes(actions_in, 0, 1) if replay else jnp.zeros((M, E), jnp.int32)
 
     def step(carry, xs):
         dev_pol, dev_cost, mem, k = carry
-        t, a_replay = xs
+        t, a_replay, valid = xs
         if use_cost:
             q = N.cost_device_heads(cost_params, dev_cost)        # (E,D,3)
             q = jax.lax.stop_gradient(q)
@@ -94,13 +103,18 @@ def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
         probs = jax.nn.softmax(logits, axis=-1)
         ent = -jnp.sum(probs * jnp.where(legal, logp_all, 0.0), axis=-1)
         onehot = jax.nn.one_hot(a, D)                             # (E,D)
+        if masked:                        # zero padded rows' contributions
+            onehot = onehot * valid
+            logp = logp * valid
+            ent = ent * valid
         dev_pol = dev_pol + onehot[..., None] * h_pol[t][None, None, :]
         dev_cost = dev_cost + onehot[..., None] * h_cost[t][None, None, :]
         mem = mem + onehot * sizes[t]
         return (dev_pol, dev_cost, mem, k), (a, logp, ent)
 
     init = (jnp.zeros((E, D, H)), jnp.zeros((E, D, H)), jnp.zeros((E, D)), key)
-    xs = (jnp.arange(M), acts)
+    valid_seq = tmask if masked else jnp.ones((M,), h_pol.dtype)
+    xs = (jnp.arange(M), acts, valid_seq)
     (dev_pol, dev_cost, mem, _), (a_seq, logp_seq, ent_seq) = jax.lax.scan(
         step, init, xs)
     actions = jnp.swapaxes(a_seq, 0, 1)                           # (E, M)
@@ -133,6 +147,41 @@ def rollout(policy_params, cost_params, feats, sizes, cap, key, *,
         n_devices, n_episodes, greedy, use_cost, reward_mode=reward_mode,
         log_targets=log_targets)
     return actions, est_cost
+
+
+def decode_candidates(policy_params, cost_params, feats, sizes, cap, *,
+                      n_devices, n_candidates, tmask=None, use_cost=True,
+                      reward_mode="composed", log_targets=True):
+    """Algorithm-2 inference core: greedy decode + sampled candidates.
+
+    Returns ``(actions (k, M), est_cost (k,))`` -- one greedy episode
+    (PRNGKey(0)) followed by ``n_candidates - 1`` sampled episodes
+    (PRNGKey(1)), all ranked by the cost network's estimate.  This is the
+    ONE decode implementation: ``DreamShard.place_detailed`` jits it
+    per-task (via ``decode_candidates_jit``) and ``PlacementSession``
+    vmaps it per padded bucket, so the two paths cannot drift apart.
+    Unjitted: callers jit/vmap per shape.
+    """
+    h_pol = N.policy_table_reprs(policy_params, feats)
+    h_cost = N.cost_table_reprs(cost_params, feats)
+    common = dict(reward_mode=reward_mode, log_targets=log_targets,
+                  tmask=tmask)
+    a, _, _, est = _scan_rollout(
+        policy_params, cost_params, h_pol, h_cost, sizes, cap,
+        jax.random.PRNGKey(0), n_devices, 1, True, use_cost, **common)
+    if n_candidates > 1:
+        a2, _, _, est2 = _scan_rollout(
+            policy_params, cost_params, h_pol, h_cost, sizes, cap,
+            jax.random.PRNGKey(1), n_devices, n_candidates - 1, False,
+            use_cost, **common)
+        a = jnp.concatenate([a, a2])
+        est = jnp.concatenate([est, est2])
+    return a, est
+
+
+decode_candidates_jit = functools.partial(
+    jax.jit, static_argnames=("n_devices", "n_candidates", "use_cost",
+                              "reward_mode", "log_targets"))(decode_candidates)
 
 
 def rollout_with_reprs(policy_params, cost_params, h_pol, feats, sizes, cap,

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.oracle import CostOracle, SimOracle, ensure_oracle
 from repro.core import features as F
 from repro.core import networks as N
 from repro.core import rollout as R
@@ -61,12 +62,22 @@ class CostSample:
 
 
 class DreamShard:
-    """End-to-end DreamShard agent bound to a hardware oracle."""
+    """End-to-end DreamShard agent bound to a hardware ``CostOracle``.
 
-    def __init__(self, train_tasks: list[Task], sim: CostSimulator,
+    Accepts any ``repro.api.CostOracle`` (or a bare ``CostSimulator``,
+    auto-wrapped): the trainer only ever touches ``evaluate`` /
+    ``mem_capacity_gb`` / ``num_evaluations``, so measured (KernelOracle)
+    or memoized (CachedOracle) backends drop in without code changes.
+    """
+
+    def __init__(self, train_tasks: list[Task],
+                 oracle: CostOracle | CostSimulator,
                  config: DreamShardConfig | None = None):
         self.tasks = train_tasks
-        self.sim = sim
+        self.oracle = ensure_oracle(oracle)
+        # legacy alias: the underlying simulator, when there is one
+        self.sim = self.oracle.sim if isinstance(self.oracle, SimOracle) \
+            else None
         self.cfg = config or DreamShardConfig()
         self.rng = np.random.default_rng(self.cfg.seed)
         key = jax.random.PRNGKey(self.cfg.seed)
@@ -74,19 +85,28 @@ class DreamShard:
         self.cost_params = N.cost_net_init(k1)
         self.policy_params = N.policy_net_init(k2)
 
+        self._rebuild_opt_and_caches()
+
+        self.buffer: list[CostSample] = []
+        self._m_pad = max(t.n_tables for t in train_tasks)
+        self._d_pad = max(t.n_devices for t in train_tasks)
+        self.history: list[dict] = []
+        self._placer = None      # cached repro.api placer (see as_placer)
+        self._placer_sig = None
+
+    def _rebuild_opt_and_caches(self):
+        """(Re)create everything derived from the config: optimizers, their
+        states, and the jitted update caches.  Called from ``__init__`` and
+        again from ``restore`` -- a restored config must not run against
+        update functions traced under the old one."""
         total_cost_steps = self.cfg.n_iterations * self.cfg.n_cost
         total_rl_steps = self.cfg.n_iterations * self.cfg.n_rl
         self._cost_opt = adam(linear_decay(self.cfg.lr, total_cost_steps))
         self._rl_opt = adam(linear_decay(self.cfg.lr, total_rl_steps))
         self.cost_opt_state = self._cost_opt.init(self.cost_params)
         self.rl_opt_state = self._rl_opt.init(self.policy_params)
-
-        self.buffer: list[CostSample] = []
-        self._m_pad = max(t.n_tables for t in train_tasks)
-        self._d_pad = max(t.n_devices for t in train_tasks)
         self._rl_updates = {}    # (D, E) -> jitted update
         self._cost_update = self._build_cost_update()
-        self.history: list[dict] = []
 
     # ---- feature plumbing -----------------------------------------------------
 
@@ -120,7 +140,7 @@ class DreamShard:
     # ---- Algorithm 1 stage 1: data collection ---------------------------------
 
     def collect(self):
-        cap = self.sim.spec.mem_capacity_gb
+        cap = self.oracle.mem_capacity_gb
         for _ in range(self.cfg.n_collect):
             task = self.tasks[self.rng.integers(len(self.tasks))]
             feats, sizes = self._prepared(task)
@@ -134,8 +154,8 @@ class DreamShard:
                 log_targets=self._log_targets)
             assignment = np.empty(task.n_tables, dtype=np.int64)
             assignment[order] = np.asarray(actions[0])
-            res = self.sim.evaluate(task.raw_features, assignment,
-                                    task.n_devices)
+            res = self.oracle.evaluate(task.raw_features, assignment,
+                                       task.n_devices)
             self.buffer.append(CostSample(
                 feats_norm=feats, assignment=assignment,
                 q=self.transform_targets(res.cost_features),
@@ -209,7 +229,7 @@ class DreamShard:
 
     def update_policy(self, n_steps: int | None = None):
         n_steps = n_steps if n_steps is not None else self.cfg.n_rl
-        cap = self.sim.spec.mem_capacity_gb
+        cap = self.oracle.mem_capacity_gb
         rewards = []
         for _ in range(n_steps):
             task = self.tasks[self.rng.integers(len(self.tasks))]
@@ -235,7 +255,7 @@ class DreamShard:
             entry = {"iteration": it, "cost_loss": cost_loss,
                      "mean_est_reward": mean_reward,
                      "wall_s": time.perf_counter() - t0,
-                     "sim_evals": self.sim.num_evaluations}
+                     "sim_evals": self.oracle.num_evaluations}
             if eval_tasks is not None:
                 entry["eval_cost_ms"] = self.evaluate_tasks(eval_tasks)
             self.history.append(entry)
@@ -248,36 +268,50 @@ class DreamShard:
 
     # ---- Algorithm 2: inference -------------------------------------------------
 
-    def place(self, raw_features: np.ndarray, n_devices: int,
-              n_candidates: int | None = None) -> np.ndarray:
-        """Algorithm 2 (hardware-free inference): greedy argmax decode, plus
-        optional sampled candidates ranked by the estimated cost."""
+    def _inference_inputs(self, raw_features: np.ndarray):
+        """(feats_norm (M,F), sizes_gb (M,), descending-cost order (M,))."""
         raw = (F.drop_feature_group(raw_features, self.cfg.feature_drop)
                if self.cfg.feature_drop else raw_features)
         feats = F.normalize_features(raw)
         sizes = raw_features[:, F.TABLE_SIZE_GB].astype(np.float32)
-        order = self._sorted_order(feats)
-        common = dict(n_devices=n_devices,
-                      use_cost=self.cfg.use_cost_features,
-                      reward_mode=self.cfg.reward_mode,
-                      log_targets=self._log_targets)
-        args = (self.policy_params, self.cost_params,
-                jnp.asarray(feats[order]), jnp.asarray(sizes[order]),
-                self.sim.spec.mem_capacity_gb)
-        actions, est = R.rollout(*args, jax.random.PRNGKey(0),
-                                 n_episodes=1, greedy=True, **common)
-        actions, est = np.asarray(actions), np.asarray(est)
+        return feats, sizes, self._sorted_order(feats)
+
+    def place_detailed(self, raw_features: np.ndarray, n_devices: int,
+                       n_candidates: int | None = None
+                       ) -> tuple[np.ndarray, float]:
+        """Algorithm 2 (hardware-free inference): greedy argmax decode, plus
+        optional sampled candidates ranked by the estimated cost.  Returns
+        ``(assignment, estimated_cost_ms_of_the_chosen_candidate)``."""
+        feats, sizes, order = self._inference_inputs(raw_features)
         k = self.cfg.inference_candidates if n_candidates is None \
             else n_candidates
-        if k > 1:
-            a2, e2 = R.rollout(*args, jax.random.PRNGKey(1),
-                               n_episodes=k - 1, greedy=False, **common)
-            actions = np.concatenate([actions, np.asarray(a2)])
-            est = np.concatenate([est, np.asarray(e2)])
+        actions, est = R.decode_candidates_jit(
+            self.policy_params, self.cost_params,
+            jnp.asarray(feats[order]), jnp.asarray(sizes[order]),
+            self.oracle.mem_capacity_gb, n_devices=n_devices,
+            n_candidates=k, use_cost=self.cfg.use_cost_features,
+            reward_mode=self.cfg.reward_mode, log_targets=self._log_targets)
+        actions, est = np.asarray(actions), np.asarray(est)
         best = int(np.argmin(est))
         assignment = np.empty(raw_features.shape[0], dtype=np.int64)
         assignment[order] = actions[best]
-        return assignment
+        return assignment, float(est[best])
+
+    def place(self, raw_features: np.ndarray, n_devices: int,
+              n_candidates: int | None = None) -> np.ndarray:
+        return self.place_detailed(raw_features, n_devices, n_candidates)[0]
+
+    def as_placer(self, n_candidates: int | None = None,
+                  bucket_tables: int = 8):
+        """This agent behind the unified ``repro.api.Placer`` protocol
+        (cached: repeated calls share one batched ``PlacementSession``)."""
+        from repro.api.placers import DreamShardPlacer
+        if self._placer is None or \
+                (n_candidates, bucket_tables) != self._placer_sig:
+            self._placer = DreamShardPlacer(self, n_candidates=n_candidates,
+                                            bucket_tables=bucket_tables)
+            self._placer_sig = (n_candidates, bucket_tables)
+        return self._placer
 
     def save(self, path: str):
         """Checkpoint the trained agent (both networks + config)."""
@@ -286,15 +320,35 @@ class DreamShard:
         from repro.checkpoint import save_pytree
         save_pytree({"cost": self.cost_params,
                      "policy": self.policy_params}, path)
-        json.dump(dataclasses.asdict(self.cfg),
-                  open(os.path.join(path, "config.json"), "w"))
+        with open(os.path.join(path, "config.json"), "w") as f:
+            json.dump(dataclasses.asdict(self.cfg), f, indent=2)
 
     def restore(self, path: str):
+        """Restore networks AND config: a round-trip reproduces the saved
+        agent's inference behaviour (candidate count, reward mode, ...)."""
+        import json
+        import os
         from repro.checkpoint import restore_pytree
+        old_cfg = self.cfg
+        cfg_path = os.path.join(path, "config.json")
+        if os.path.exists(cfg_path):
+            with open(cfg_path) as f:
+                stored = json.load(f)
+            known = {fld.name for fld in dataclasses.fields(DreamShardConfig)}
+            self.cfg = DreamShardConfig(
+                **{k: v for k, v in stored.items() if k in known})
         tree = restore_pytree({"cost": self.cost_params,
                                "policy": self.policy_params}, path)
         self.cost_params = tree["cost"]
         self.policy_params = tree["policy"]
+        # everything traced/derived under the old config is now stale:
+        # optimizers, jitted updates, and the cached placer's session
+        self._rebuild_opt_and_caches()
+        self._placer = None
+        self._placer_sig = None
+        if (old_cfg.target_transform, old_cfg.cost_scale) != \
+                (self.cfg.target_transform, self.cfg.cost_scale):
+            self.buffer = []     # old samples are in the old target units
 
     def cost_mse(self, samples: list["CostSample"]) -> float:
         """Test MSE of the cost network on held-out cost samples (Fig 7)."""
@@ -312,8 +366,7 @@ class DreamShard:
         return lq + lc
 
     def evaluate_tasks(self, tasks: list[Task]) -> float:
-        costs = [self.sim.evaluate(t.raw_features,
-                                   self.place(t.raw_features, t.n_devices),
-                                   t.n_devices).overall
-                 for t in tasks]
-        return float(np.mean(costs))
+        """Mean measured cost over a suite, decoded through the batched
+        ``PlacementSession`` (one compile per task-shape bucket)."""
+        from repro.api.placement import evaluate_placer
+        return evaluate_placer(self.oracle, tasks, self.as_placer())

@@ -23,6 +23,14 @@ class Task:
     def n_tables(self) -> int:
         return self.raw_features.shape[0]
 
+    @classmethod
+    def of(cls, raw_features: np.ndarray, n_devices: int,
+           name: str = "") -> "Task":
+        """Ad-hoc task over raw features not drawn from a pool (serving)."""
+        raw = np.asarray(raw_features)
+        return cls(raw_features=raw, n_devices=n_devices,
+                   table_ids=np.arange(raw.shape[0]), name=name)
+
 
 def split_pool(pool: np.ndarray, seed: int = 0):
     """Disjoint 50/50 train/test table pools (App. E)."""

@@ -22,7 +22,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
+try:                                      # jax >= 0.6 top-level export
+    _shard_map = jax.shard_map
+    _REP_KWARG = "check_vma"
+except AttributeError:                    # older jax: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _REP_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """Version-robust shard_map (the replication-check kwarg was renamed)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_REP_KWARG: check_vma})
 
 from repro.embedding.plan import PlacementPlan
 from repro.kernels.embedding_bag.ref import embedding_bag_ref

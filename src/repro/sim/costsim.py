@@ -24,6 +24,7 @@ PARAM benchmarking run on real hardware.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -31,6 +32,28 @@ from repro.core import features as F
 from repro.sim.hardware import HardwareSpec, PAPER_GPU
 
 DEFAULT_BATCH = 65536
+
+
+def placement_bytes(raw: np.ndarray, assignment: np.ndarray,
+                    n_devices: int) -> bytes:
+    """Canonical byte serialization of one placement query -- the shared
+    input to the simulator's noise digest and ``CachedOracle`` keys."""
+    r = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
+    a = np.ascontiguousarray(np.asarray(assignment, dtype=np.int64))
+    return r.tobytes() + a.tobytes() + int(n_devices).to_bytes(8, "little")
+
+
+def placement_digest(raw: np.ndarray, assignment: np.ndarray,
+                     n_devices: int) -> int:
+    """Deterministic 32-bit digest of one placement query.
+
+    Unlike the built-in ``hash`` (salted per process by PYTHONHASHSEED),
+    ``zlib.crc32`` is stable across processes, so it reproducibly seeds
+    the simulator's measurement noise.  ``repro.api.CachedOracle`` hashes
+    the same ``placement_bytes`` stream (wide, collision-safe) for its
+    memo keys.
+    """
+    return zlib.crc32(placement_bytes(raw, assignment, n_devices))
 
 
 @dataclasses.dataclass
@@ -199,7 +222,7 @@ class CostSimulator:
             dim_sums[d] = sub[:, F.DIM].sum() if sub.shape[0] else 0.0
         comm = self._comm_ms(dim_sums, n_devices)
 
-        key = hash((int(assignment.sum()), assignment.tobytes(), n_devices)) & 0x7FFFFFFF
+        key = placement_digest(raw, assignment, n_devices) & 0x7FFFFFFF
         fwd = fwd * self._noise(key ^ 1, fwd.shape)
         bwd = bwd * self._noise(key ^ 2, bwd.shape)
         bwd_comm = comm * self._noise(key ^ 3, comm.shape)

@@ -108,10 +108,17 @@ idx = np.where(rng.random((B, M, P)) < 0.2, -1,
 gidx = jnp.asarray(E.group_indices(plan, idx))
 bases = jnp.asarray(plan.base_rows)
 ref = E.lookup_unsharded(arenas, plan.base_rows, gidx, plan)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+import contextlib
+try:                                        # jax >= 0.6
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+except (AttributeError, TypeError):         # older jax
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(2, 4),
+                             ("data", "model"))
 lookup = E.make_sharded_lookup(mesh, plan)
-with jax.set_mesh(mesh):
+ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") \
+    else contextlib.nullcontext()
+with ctx:
     out = lookup(arenas, bases, gidx)
 assert np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5), "mismatch"
 print("SHARDED_OK")

@@ -1,7 +1,10 @@
 """Hypothesis property-based tests on system invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import baselines as B
 from repro.core import features as F
