@@ -1,0 +1,176 @@
+"""B5: the sim-to-real loop -- calibration, MeasuredOracle throughput,
+and cost-network quality when trained on SimOracle vs MeasuredOracle.
+
+Three questions:
+
+1. **Throughput** -- the old ``KernelOracle`` re-timed kernels inside
+   every ``evaluate``; ``MeasuredOracle`` interpolates an offline
+   calibration artifact with zero kernel launches.  How many evaluates
+   per second does each sustain on a 20-table task?  (Acceptance:
+   >= 100x.)
+2. **Cost-network fidelity** -- train DreamShard once against the
+   analytic ``SimOracle`` and once against the ``MeasuredOracle``; whose
+   cost network predicts *measured* costs better (MAPE on held-out
+   random placements)?
+3. **End placement quality** -- evaluate both agents' placements on the
+   measured oracle (the deployment metric): training against the wrong
+   cost model is the sim-to-real gap this subsystem closes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.api import MeasuredOracle, SimOracle, evaluate_placer
+from repro.core import baselines as B
+from repro.core import features as F
+from repro.core import networks as N
+from repro.core.trainer import CostSample, DreamShard, DreamShardConfig
+from repro.data.tasks import sample_tasks, split_pool
+from repro.profiling import (CalibrationTable, load_or_none,
+                             measure_placement)
+
+N_TABLES = 20
+N_DEVICES = 4
+
+
+def get_table() -> tuple[CalibrationTable, float]:
+    """Cached artifact if present (CI caches it), else a smoke sweep."""
+    t0 = time.perf_counter()
+    table = load_or_none()
+    if table is None:
+        table = CalibrationTable.measure(
+            dims=(16, 64, 256), rows=(256, 4096), batches=(64,),
+            poolings=(2, 8), use_pallas=False, warmup=1, repeats=2)
+    return table, time.perf_counter() - t0
+
+
+def costnet_mape(agent: DreamShard, samples: list[CostSample],
+                 true_ms: np.ndarray) -> float:
+    """MAPE of the agent's cost network vs measured overall cost (ms)."""
+    buf = agent.buffer
+    agent.buffer = samples
+    batch = agent._cost_batch(np.arange(len(samples)))
+    agent.buffer = buf
+    feats, onehot, tmask, dmask, _, _ = map(jnp.asarray, batch)
+    _, overall = N.cost_net_apply(agent.cost_params, feats, onehot,
+                                  tmask, dmask)
+    pred = np.asarray(overall)
+    pred_ms = np.expm1(pred) if agent.cfg.target_transform == "log1p" \
+        else pred / agent.cfg.cost_scale
+    return float(np.mean(np.abs(pred_ms - true_ms)
+                         / np.maximum(true_ms, 1e-9)))
+
+
+def measured_holdout(agent: DreamShard, oracle: MeasuredOracle, tasks,
+                     n: int, seed: int = 0):
+    """Held-out (placement, measured cost) pairs in the agent's units."""
+    rng = np.random.default_rng(seed)
+    samples, true_ms = [], []
+    for i in range(n):
+        t = tasks[i % len(tasks)]
+        a = B.random_place(t.raw_features, t.n_devices,
+                           oracle.mem_capacity_gb, rng)
+        res = oracle.evaluate(t.raw_features, a, t.n_devices)
+        samples.append(CostSample(
+            feats_norm=F.normalize_features(t.raw_features), assignment=a,
+            q=agent.transform_targets(res.cost_features),
+            overall=float(agent.transform_targets(res.overall)),
+            n_devices=t.n_devices))
+        true_ms.append(res.overall)
+    return samples, np.asarray(true_ms)
+
+
+def run():
+    rows = []
+    pool = C.get_pool("DLRM")
+    train_ids, test_ids = split_pool(pool, seed=0)
+    train_tasks = sample_tasks(pool, train_ids, N_TABLES, N_DEVICES, 8,
+                               seed=1, name="s2r-train")
+    test_tasks = sample_tasks(pool, test_ids, N_TABLES, N_DEVICES, 6,
+                              seed=2, name="s2r-test")
+
+    table, cal_s = get_table()
+    rows.append({"variant": "calibration", "wall_s": round(cal_s, 2),
+                 "summary": table.summary()})
+    print(rows[-1], flush=True)
+
+    # --- 1. evaluate throughput: interpolation vs the old live loop ------
+    t = train_tasks[0]
+    rng = np.random.default_rng(0)
+    assigns = [B.random_place(t.raw_features, t.n_devices, 11.0, rng)
+               for _ in range(8)]
+    oracle = MeasuredOracle(table)
+    oracle.evaluate(t.raw_features, assigns[0], t.n_devices)   # warm numpy
+    n_interp = 300
+    t0 = time.perf_counter()
+    for i in range(n_interp):
+        oracle.evaluate(t.raw_features, assigns[i % len(assigns)],
+                        t.n_devices)
+    interp_s_per = (time.perf_counter() - t0) / n_interp
+
+    n_live = 2
+    t0 = time.perf_counter()
+    for i in range(n_live):
+        measure_placement(t.raw_features, assigns[i], t.n_devices,
+                          batch_size=64, pooling=4, max_rows=4096, repeats=2)
+    live_s_per = (time.perf_counter() - t0) / n_live
+
+    speedup = live_s_per / interp_s_per
+    rows.append({"variant": "evaluate_throughput",
+                 "measured_evals_per_sec": round(1.0 / interp_s_per, 1),
+                 "live_kernel_evals_per_sec": round(1.0 / live_s_per, 3),
+                 "speedup": round(speedup, 1),
+                 "target": ">=100x"})
+    print(rows[-1], flush=True)
+    assert speedup >= 100.0, f"MeasuredOracle only {speedup:.0f}x faster"
+
+    # --- 2+3. train on sim vs measured, judge on measured ----------------
+    cfg = DreamShardConfig(n_iterations=2, n_collect=8, n_cost=60, n_rl=4,
+                           seed=0)
+    agents = {}
+    for name, train_oracle in (
+            ("sim", SimOracle(C.get_sim("DLRM"))),
+            ("measured", MeasuredOracle(table))):
+        t0 = time.perf_counter()
+        agent = DreamShard(train_tasks, train_oracle, cfg)
+        agent.train()
+        agents[name] = agent
+        rows.append({"variant": f"train_on_{name}",
+                     "wall_s": round(time.perf_counter() - t0, 1),
+                     "oracle_evals": train_oracle.num_evaluations})
+        print(rows[-1], flush=True)
+
+    holdout_oracle = MeasuredOracle(table)
+    for name, agent in agents.items():
+        samples, true_ms = measured_holdout(agent, holdout_oracle,
+                                            test_tasks, 24, seed=3)
+        mape = costnet_mape(agent, samples, true_ms)
+        eval_oracle = MeasuredOracle(table)
+        cost = evaluate_placer(eval_oracle, test_tasks, agent.as_placer())
+        rows.append({"variant": f"sim2real_{name}",
+                     "trained_on": name,
+                     "costnet_mape_vs_measured": round(mape, 4),
+                     "measured_placement_ms": round(cost, 4)})
+        print(rows[-1], flush=True)
+
+    rand_cost = np.mean([
+        holdout_oracle.evaluate(
+            tk.raw_features,
+            B.random_place(tk.raw_features, tk.n_devices,
+                           holdout_oracle.mem_capacity_gb,
+                           np.random.default_rng(7)),
+            tk.n_devices).overall
+        for tk in test_tasks])
+    rows.append({"variant": "sim2real_random_baseline",
+                 "measured_placement_ms": round(float(rand_cost), 4)})
+    print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

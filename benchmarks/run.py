@@ -26,6 +26,7 @@ MODULES = [
     "fig12_fusion",           # Fig 12: operation-fusion analysis
     "b3_reductions",          # App B.3: sum/max reduction comparison
     "b4_session_throughput",  # PlacementSession batched serving vs per-task
+    "b5_sim2real",            # calibration + MeasuredOracle vs SimOracle
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

@@ -24,7 +24,7 @@ def run():
     sim = C.get_sim("DLRM", noise_std=0.0)
     rows = []
     for name, dims in CASES:
-        comm = sim._comm_ms(np.asarray(dims, float), 4)
+        comm = sim.comm_ms(np.asarray(dims, float), 4)
         rows.append({"case": name, "dim_sums": dims,
                      "per_device_ms": [round(x, 2) for x in comm],
                      "max_ms": round(float(comm.max()), 2)})

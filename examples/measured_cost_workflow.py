@@ -1,0 +1,65 @@
+"""Measured-cost workflow: calibrate -> train -> place.
+
+The sim-to-real loop in three steps: (1) run the offline micro-benchmark
+calibration once (here a tiny in-process smoke sweep; in production
+``python -m repro.profiling.calibrate`` persists the artifact), (2) train
+DreamShard against a ``MeasuredOracle`` that interpolates the measured
+costs with zero kernel launches per evaluate, (3) place unseen tasks and
+read the measured cost decomposition.
+
+  PYTHONPATH=src python examples/measured_cost_workflow.py
+"""
+
+import numpy as np
+
+from repro.api import MeasuredOracle, evaluate_placer, make_baseline_placers
+from repro.core.trainer import DreamShard, DreamShardConfig
+from repro.data.synthetic import make_dlrm_pool
+from repro.data.tasks import make_benchmark_suite
+from repro.profiling import CalibrationTable, load_or_none
+
+
+def main():
+    # 1. calibrate (reuse the persisted artifact when one exists --
+    #    `python -m repro.profiling.calibrate --smoke` writes it)
+    table = load_or_none()
+    if table is None:
+        print("calibrating (smoke grid; persist one with "
+              "`python -m repro.profiling.calibrate`)...")
+        table = CalibrationTable.measure(
+            dims=(16, 64, 256), rows=(256, 4096), batches=(64,),
+            poolings=(2, 8), use_pallas=False, repeats=2)
+    print(table.summary())
+
+    # 2. train against measured costs -- same trainer, different oracle
+    pool = make_dlrm_pool(seed=0)
+    train_tasks, test_tasks = make_benchmark_suite(
+        pool, n_tables=20, n_devices=4, n_tasks=10)
+    oracle = MeasuredOracle(table)
+    agent = DreamShard(train_tasks, oracle,
+                       DreamShardConfig(n_iterations=6, n_collect=10,
+                                        n_cost=150, n_rl=8))
+    agent.train(eval_tasks=test_tasks[:3], log=True)
+
+    # 3. place unseen tasks; every number below is interpolated from the
+    #    calibration artifact, not simulated
+    placers = make_baseline_placers(oracle, seed=0)
+    placers["dreamshard"] = agent.as_placer()
+    print("\n== held-out tasks, measured cost ==")
+    for name, placer in placers.items():
+        cost = evaluate_placer(MeasuredOracle(table), test_tasks, placer)
+        print(f"  {name:12s} {cost:8.3f} ms")
+
+    t = test_tasks[0]
+    res = oracle.evaluate(t.raw_features, placers["dreamshard"]
+                          .place(t).assignment, t.n_devices)
+    with np.printoptions(precision=3):
+        print(f"\nmeasured decomposition for task 0: overall "
+              f"{res.overall:.3f} ms\n  fwd_comp {res.fwd_comp}\n"
+              f"  bwd_comp {res.bwd_comp}\n  bwd_comm {res.bwd_comm}")
+    print(f"oracle consumed {oracle.num_evaluations} evaluations, "
+          "0 kernel launches after calibration")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,11 @@
 One interface over every placement strategy and cost backend:
 
 * ``CostOracle`` (protocol) with ``SimOracle`` / ``CachedOracle`` /
-  ``KernelOracle`` implementations -- `evaluate(raw, assignment,
-  n_devices) -> SimResult` plus `mem_capacity_gb` / `num_evaluations`;
+  ``MeasuredOracle`` / ``KernelOracle`` implementations --
+  `evaluate(raw, assignment, n_devices) -> SimResult` plus
+  `mem_capacity_gb` / `num_evaluations`; ``MeasuredOracle``
+  interpolates a persisted ``repro.profiling`` calibration artifact
+  (measured kernel/collective costs, zero kernel launches per call);
 * ``Placer`` (protocol) + ``Placement`` (assignment, physical
   ``PlacementPlan``, estimated cost, provenance) with adapters for
   DreamShard, the RNN baseline, expert heuristics, and random;
@@ -15,7 +18,7 @@ See ``docs/api.md`` for usage and the migration guide.
 """
 
 from repro.api.oracle import (CachedOracle, CostOracle, KernelOracle,
-                              SimOracle, ensure_oracle)
+                              MeasuredOracle, SimOracle, ensure_oracle)
 from repro.api.placement import (BasePlacer, Placement, Placer,
                                  evaluate_placements, evaluate_placer)
 from repro.api.placers import (DreamShardPlacer, ExpertPlacer, RNNPlacerAdapter,
@@ -24,7 +27,8 @@ from repro.api.session import PlacementSession
 
 __all__ = [
     "BasePlacer", "CachedOracle", "CostOracle", "DreamShardPlacer",
-    "ExpertPlacer", "KernelOracle", "Placement", "PlacementSession", "Placer",
+    "ExpertPlacer", "KernelOracle", "MeasuredOracle", "Placement",
+    "PlacementSession", "Placer",
     "RNNPlacerAdapter", "RandomPlacer", "SimOracle", "ensure_oracle",
     "evaluate_placements", "evaluate_placer", "make_baseline_placers",
 ]

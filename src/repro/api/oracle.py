@@ -5,13 +5,18 @@ Every placement strategy and benchmark talks to hardware through a
 
 * ``SimOracle``    -- wraps the analytic ``CostSimulator`` (the default
   "hardware" of the reproduction);
-* ``CachedOracle`` -- memoizes repeated placement queries on the
-  deterministic ``placement_digest`` so benchmark sweeps and greedy
-  searches never pay twice for the same placement;
-* ``KernelOracle`` -- measured-cost seam: times the real
-  ``kernels/embedding_bag`` lookup per device group and models the
-  all-to-all analytically, the hook *Pre-train and Search*-style
-  deployments plug real measurements into.
+* ``CachedOracle`` -- memoizes repeated placement queries (LRU) so
+  benchmark sweeps and greedy searches never pay twice for the same
+  placement;
+* ``MeasuredOracle`` -- measured hardware costs at simulator speed:
+  interpolates per-table kernel times and alpha-beta comm costs from a
+  persisted ``repro.profiling.CalibrationTable`` (offline micro-benchmark
+  artifact), ZERO kernel launches per ``evaluate`` -- the *Pre-train and
+  Search*-style closing of the sim-to-real loop;
+* ``KernelOracle`` -- thin adapter over the profiling subsystem: runs a
+  small calibration sweep once (lazily) and then delegates every
+  ``evaluate`` to a ``MeasuredOracle`` (it used to re-time kernels inside
+  every call).
 
 The trainer (``DreamShard``), the RNN baseline, and every ``Placer``
 adapter accept either a ``CostOracle`` or a bare ``CostSimulator``
@@ -20,13 +25,13 @@ adapter accept either a ``CostOracle`` or a bare ``CostSimulator``
 
 from __future__ import annotations
 
-import time
+import os
 from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.sim.costsim import (CostSimulator, SimResult, placement_bytes,
-                               placement_digest)
+from repro.core import features as F
+from repro.sim.costsim import CostSimulator, SimResult, placement_bytes
 from repro.sim.hardware import HardwareSpec, PAPER_GPU
 
 
@@ -90,6 +95,11 @@ class CachedOracle:
     cache is collision-safe at any sweep size).  Hit/miss behaviour is
     reproducible across processes.  ``num_evaluations`` reports the
     *inner* oracle's count -- cache hits consume no hardware budget.
+
+    Eviction is LRU (a hit moves its entry to the back of the insertion
+    order), so long greedy searches keep their hot placements cached
+    even past ``max_entries``; ``hits`` / ``misses`` / ``info()`` expose
+    the cache behaviour.
     """
 
     def __init__(self, inner, max_entries: int = 100_000):
@@ -118,33 +128,152 @@ class CachedOracle:
         hit = self._cache.get(key)
         if hit is not None:
             self.hits += 1
+            del self._cache[key]                      # LRU: move to end
+            self._cache[key] = hit
             return hit
         self.misses += 1
         res = self.inner.evaluate(raw, assignment, n_devices)
-        if len(self._cache) >= self.max_entries:      # FIFO eviction
+        if len(self._cache) >= self.max_entries:      # evict least-recent
             self._cache.pop(next(iter(self._cache)))
         self._cache[key] = res
         return res
 
+    def info(self) -> dict:
+        """Cache behaviour snapshot (hit rate, occupancy, policy)."""
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._cache), "max_entries": self.max_entries,
+                "hit_rate": self.hits / total if total else 0.0,
+                "eviction": "lru"}
 
-class KernelOracle:
-    """Measured-cost oracle stub backed by the ``embedding_bag`` kernel.
 
-    For each device group this oracle builds a small arena, synthesizes
-    zipf-ish lookup indices, and *times* the fused embedding-bag forward
-    and its scatter-add backward (the Pallas kernel on TPU, the jnp
-    reference in interpret/CPU mode).  Communication has no single-host
-    analogue, so the all-to-all stage reuses the analytic model.
+class MeasuredOracle:
+    """Measured hardware costs at ``SimOracle`` speed.
 
-    This is deliberately a seam, not a production harness: batch and
-    arena rows are capped so one ``evaluate`` stays cheap on CPU, and
-    measured milliseconds are comparable *within* one oracle, not with
-    ``SimOracle`` numbers.
+    Wraps a ``repro.profiling.CalibrationTable`` -- the persisted
+    offline micro-benchmark artifact (``python -m
+    repro.profiling.calibrate``) -- and prices a placement by pure
+    interpolation:
+
+    * per-table forward/backward kernel time is log2-multilinear
+      interpolation of the measured ``(dim, rows, batch, pooling)`` grid
+      (clamped at the grid edges), summed per device in O(tables);
+    * the all-to-all is the fitted alpha-beta model applied to each
+      device's payload (``batch * dim_sum * bytes * (n-1)/n``).
+
+    ``evaluate`` performs ZERO kernel launches, so the DreamShard
+    trainer can collect cost-network data against measured hardware at
+    full speed (see ``benchmarks/b5_sim2real.py`` for the throughput
+    win over the old per-call timing loop).  Fused-op pipelining is not
+    yet calibrated: per-device compute is the additive per-table model.
+    Measured milliseconds are comparable *within* one calibration
+    artifact, not with ``SimOracle`` numbers.
+
+    ``table`` may be a ``CalibrationTable``, a path to one, or ``None``
+    (load the default artifact, see
+    ``repro.profiling.default_artifact_path``).  ``batch_size`` defaults
+    to the table's largest *calibrated* batch so compute interpolation
+    and comm payload are priced at the same operating point (an explicit
+    batch outside the grid is edge-clamped on the compute side while the
+    comm payload keeps growing -- calibrate a matching batch instead).
     """
 
-    def __init__(self, spec: HardwareSpec = PAPER_GPU, batch_size: int = 64,
+    def __init__(self, table=None, *, batch_size: int | None = None,
+                 spec: HardwareSpec = PAPER_GPU,
+                 mem_capacity_gb: float | None = None):
+        from repro.profiling.calibration import (CalibrationTable,
+                                                 default_artifact_path)
+        if table is None:
+            path = default_artifact_path()
+            if not os.path.exists(path):
+                raise FileNotFoundError(
+                    f"no calibration artifact at {path!r}; run `python -m "
+                    "repro.profiling.calibrate` (or pass a CalibrationTable)")
+            table = CalibrationTable.load(path)
+        elif isinstance(table, (str, os.PathLike)):
+            table = CalibrationTable.load(os.fspath(table))
+        self.table = table
+        self.spec = spec
+        self.batch_size = int(table.batches[-1]) if batch_size is None \
+            else batch_size
+        self._mem_capacity_gb = (spec.mem_capacity_gb
+                                 if mem_capacity_gb is None
+                                 else mem_capacity_gb)
+        self._num_evaluations = 0
+
+    @property
+    def mem_capacity_gb(self) -> float:
+        return self._mem_capacity_gb
+
+    @property
+    def num_evaluations(self) -> int:
+        return self._num_evaluations
+
+    def per_table_ms(self, raw) -> tuple[np.ndarray, np.ndarray]:
+        """Interpolated (fwd, bwd) kernel ms per table -- (M,), (M,)."""
+        raw = np.asarray(raw, dtype=np.float64)
+        fwd = self.table.fwd_lookup_ms(raw[:, F.DIM], raw[:, F.HASH_SIZE],
+                                       self.batch_size, raw[:, F.POOLING])
+        bwd = self.table.bwd_lookup_ms(raw[:, F.DIM], raw[:, F.HASH_SIZE],
+                                       self.batch_size, raw[:, F.POOLING])
+        return fwd, bwd
+
+    def evaluate(self, raw, assignment, n_devices) -> SimResult:
+        self._num_evaluations += 1
+        raw = np.asarray(raw, dtype=np.float64)
+        assignment = np.asarray(assignment, dtype=np.int64)
+        per_fwd, per_bwd = self.per_table_ms(raw)
+        fwd = np.bincount(assignment, weights=per_fwd,
+                          minlength=n_devices)[:n_devices]
+        bwd = np.bincount(assignment, weights=per_bwd,
+                          minlength=n_devices)[:n_devices]
+        dim_sums = np.bincount(assignment, weights=raw[:, F.DIM],
+                               minlength=n_devices)[:n_devices]
+        payload_mb = (self.batch_size * dim_sums * self.spec.bytes_per_elem
+                      * (n_devices - 1) / n_devices / 1e6)
+        comm = self.table.comm_ms(payload_mb)
+        # reported fwd comm spans from each device's compute finish to the
+        # synced end of the all-to-all (same convention as the simulator)
+        fwd_comm = (fwd.max() - fwd) + comm
+        overall = fwd.max() + 2.0 * comm.max() + bwd.max()
+        return SimResult(fwd_comp=fwd, bwd_comp=bwd, fwd_comm=fwd_comm,
+                         bwd_comm=comm, overall=float(overall))
+
+    def legal(self, raw, assignment, n_devices) -> bool:
+        raw = np.asarray(raw, dtype=np.float64)
+        assignment = np.asarray(assignment, dtype=np.int64)
+        sizes = np.bincount(assignment, weights=raw[:, F.TABLE_SIZE_GB],
+                            minlength=n_devices)[:n_devices]
+        return bool((sizes <= self.mem_capacity_gb).all())
+
+
+class KernelOracle:
+    """Measured-cost oracle backed by the ``embedding_bag`` kernel: a thin
+    adapter over the ``repro.profiling`` subsystem.
+
+    On first ``evaluate`` it runs ONE small micro-benchmark sweep at the
+    configured ``(batch_size, pooling)`` operating point (kernel timing
+    via ``repro.profiling.microbench``; Pallas on TPU when
+    ``use_pallas``, jnp reference otherwise) and builds a
+    ``MeasuredOracle`` over the resulting ``CalibrationTable``.  Every
+    subsequent ``evaluate`` is pure interpolation -- the old behaviour of
+    re-timing kernels inside each call lives on only as
+    ``repro.profiling.measure_placement`` (validation/baseline).
+
+    Communication keeps the analytic alpha-beta model derived from the
+    hardware spec (a single host has no real all-to-all to measure).
+    Pass ``table=`` to reuse a persisted calibration artifact instead of
+    sweeping; ``batch_size`` then defaults to that table's largest
+    calibrated batch (like ``MeasuredOracle``), else to 64.
+    """
+
+    DEFAULT_SWEEP_BATCH = 64
+
+    def __init__(self, spec: HardwareSpec = PAPER_GPU,
+                 batch_size: int | None = None,
                  pooling: int = 4, max_rows: int = 4096, repeats: int = 2,
-                 use_pallas: bool = False, seed: int = 0):
+                 use_pallas: bool = False, seed: int = 0, table=None,
+                 max_dim: int = 768):
         self.spec = spec
         self.batch_size = batch_size
         self.pooling = pooling
@@ -152,9 +281,49 @@ class KernelOracle:
         self.repeats = repeats
         self.use_pallas = use_pallas
         self.seed = seed
-        self._num_evaluations = 0
-        # analytic comm model shared with the simulator (deterministic)
-        self._comm_model = CostSimulator(spec, noise_std=0.0)
+        self.table = table
+        self.max_dim = max_dim
+        self._measured: MeasuredOracle | None = None
+
+    def _calibration_grid(self) -> dict:
+        # the grid must reach the widest table the pools serve (prod dims
+        # go to 768) -- interpolation clamps at the top dim, so a short
+        # grid would silently underprice exactly the most expensive
+        # tables.  dims must be 128-multiples when timing the Pallas
+        # kernel (lane padding would alias smaller dims onto the same
+        # compiled shape).
+        dims = (128, 256) if self.use_pallas else (16, 64, 256)
+        if self.max_dim > dims[-1]:
+            pad = (int(np.ceil(self.max_dim / 128) * 128)
+                   if self.use_pallas else int(self.max_dim))
+            dims = dims + (pad,)
+        return {"dims": dims,
+                "rows": (64, max(128, self.max_rows)),
+                "batches": (self.batch_size if self.batch_size is not None
+                            else self.DEFAULT_SWEEP_BATCH,),
+                "poolings": (self.pooling,)}
+
+    def measured(self) -> MeasuredOracle:
+        """The underlying interpolating oracle (calibrates on first use)."""
+        if self._measured is None:
+            from repro.profiling.calibration import CalibrationTable
+            from repro.profiling.collectives import CommModel
+            table = self.table
+            batch = self.batch_size
+            if table is None:
+                grid = self._calibration_grid()
+                table = CalibrationTable.measure(
+                    **grid, use_pallas=self.use_pallas,
+                    warmup=1, repeats=self.repeats, seed=self.seed,
+                    spec=self.spec, comm=CommModel.from_spec(self.spec))
+                batch = grid["batches"][0]
+            elif isinstance(table, (str, os.PathLike)):
+                table = CalibrationTable.load(os.fspath(table))
+            # batch=None -> the table's calibrated batch (coherent
+            # compute/comm operating point, same as MeasuredOracle)
+            self._measured = MeasuredOracle(table, batch_size=batch,
+                                            spec=self.spec)
+        return self._measured
 
     @property
     def mem_capacity_gb(self) -> float:
@@ -162,57 +331,8 @@ class KernelOracle:
 
     @property
     def num_evaluations(self) -> int:
-        return self._num_evaluations
-
-    def _time_ms(self, fn, *args) -> float:
-        fn(*args).block_until_ready()            # warmup / compile
-        best = float("inf")
-        for _ in range(self.repeats):
-            t0 = time.perf_counter()
-            fn(*args).block_until_ready()
-            best = min(best, time.perf_counter() - t0)
-        return best * 1e3
+        return 0 if self._measured is None else \
+            self._measured.num_evaluations
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
-        import jax.numpy as jnp
-        from repro.core import features as F
-        from repro.kernels.embedding_bag.ref import (embedding_bag_grad_ref,
-                                                     embedding_bag_ref)
-        if self.use_pallas:
-            from repro.kernels.embedding_bag.ops import embedding_bag
-        self._num_evaluations += 1
-        raw = np.asarray(raw, dtype=np.float64)
-        assignment = np.asarray(assignment)
-        rng = np.random.default_rng(
-            placement_digest(raw, assignment, n_devices) ^ self.seed)
-        dim = max(128, int(np.ceil(raw[:, F.DIM].max() / 128) * 128))
-        fwd = np.zeros(n_devices)
-        bwd = np.zeros(n_devices)
-        dim_sums = np.zeros(n_devices)
-        for d in range(n_devices):
-            sub = raw[assignment == d]
-            if sub.shape[0] == 0:
-                continue
-            rows = np.minimum(sub[:, F.HASH_SIZE].astype(np.int64),
-                              self.max_rows)
-            bases = np.concatenate([[1], 1 + np.cumsum(rows)[:-1]])
-            arena = jnp.zeros((1 + int(rows.sum()), dim), jnp.float32)
-            idx = np.zeros((self.batch_size * len(rows), self.pooling),
-                           np.int32)
-            for k, (b, r) in enumerate(zip(bases, rows)):
-                draws = rng.zipf(1.5, size=(self.batch_size, self.pooling))
-                lo = k * self.batch_size
-                idx[lo:lo + self.batch_size] = b + draws % r
-            idx = jnp.asarray(idx)
-            if self.use_pallas:
-                fwd[d] = self._time_ms(embedding_bag, arena, idx)
-            else:
-                fwd[d] = self._time_ms(embedding_bag_ref, arena, idx)
-            g = jnp.ones((idx.shape[0], dim), jnp.float32)
-            bwd[d] = self._time_ms(embedding_bag_grad_ref, arena.shape, idx, g)
-            dim_sums[d] = sub[:, F.DIM].sum()
-        comm = self._comm_model._comm_ms(dim_sums, n_devices)
-        fwd_comm = (fwd.max() - fwd) + comm
-        overall = fwd.max() + 2.0 * comm.max() + bwd.max()
-        return SimResult(fwd_comp=fwd, bwd_comp=bwd, fwd_comm=fwd_comm,
-                         bwd_comm=comm, overall=float(overall))
+        return self.measured().evaluate(raw, assignment, n_devices)

@@ -1,0 +1,41 @@
+"""Offline calibration + measured-cost profiling subsystem.
+
+Closes the sim-to-real loop: instead of learning placement against the
+analytic ``CostSimulator`` only, measure the real kernels/collectives
+ONCE offline (AutoShard-style micro-benchmarks) and let oracles
+*interpolate* those measurements at search/training speed
+(*Pre-train and Search*-style).
+
+* ``microbench``   -- compiled-kernel timing harness over a
+  ``(dim, rows, batch, pooling)`` grid (Pallas on TPU, jnp ref on CPU);
+* ``collectives``  -- all-to-all measurement over the real device mesh
+  (seeded synthetic trace on single-device hosts) fitted to an
+  alpha-beta latency/bandwidth model;
+* ``calibration``  -- the persisted, versioned ``CalibrationTable``
+  artifact (npz + hardware fingerprint) with log2-multilinear
+  interpolation;
+* ``calibrate``    -- the ``python -m repro.profiling.calibrate`` CLI.
+
+``repro.api.MeasuredOracle`` consumes the artifact; the workflow is
+calibrate (once) -> train (``DreamShard(tasks, MeasuredOracle())``) ->
+place.  See ``docs/api.md`` ("Measured costs & calibration").
+"""
+
+from repro.profiling.calibration import (CALIBRATION_VERSION,
+                                         CalibrationTable,
+                                         default_artifact_path,
+                                         hardware_fingerprint, load_or_none)
+from repro.profiling.collectives import (CommModel, calibrate_comm,
+                                         fit_alpha_beta, measure_all_to_all,
+                                         synthetic_trace)
+from repro.profiling.microbench import (BenchPoint, bench_shape,
+                                        measure_placement, median_time_ms,
+                                        sweep)
+
+__all__ = [
+    "BenchPoint", "CALIBRATION_VERSION", "CalibrationTable", "CommModel",
+    "bench_shape", "calibrate_comm", "default_artifact_path",
+    "fit_alpha_beta", "hardware_fingerprint", "load_or_none",
+    "measure_all_to_all", "measure_placement", "median_time_ms",
+    "sweep", "synthetic_trace",
+]

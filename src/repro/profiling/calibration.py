@@ -1,0 +1,289 @@
+"""Persisted calibration artifact: measured kernel/collective costs.
+
+A ``CalibrationTable`` holds the micro-benchmark grids from
+``repro.profiling.microbench`` (per-shape forward/backward kernel
+milliseconds over ``(dim, rows, batch, pooling)``), the fitted
+``CommModel`` from ``repro.profiling.collectives``, a hardware
+fingerprint, and a format version.  It persists as a single ``.npz``
+(arrays raw, scalar metadata JSON-encoded) and answers interpolation
+queries: per-table costs are *multilinear in log2-space* over the grid,
+clamped to the grid's convex hull (out-of-range queries snap to the
+nearest edge -- calibrate a wider grid if that matters).
+
+``CalibrationTable.synthetic`` builds a deterministic table from the
+analytic ``CostSimulator`` instead of measuring -- the bridge used by
+tests and by sim-vs-measured comparisons where hardware timing noise
+would make assertions flaky.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+
+import numpy as np
+
+from repro.profiling.collectives import CommModel, calibrate_comm
+from repro.sim.hardware import HardwareSpec, PAPER_GPU
+
+CALIBRATION_VERSION = 1
+
+# tiny CI-friendly grid (--smoke); dims stay unpadded so CPU reference
+# timings actually differ per point (the Pallas path pads to 128 lanes)
+SMOKE_GRID = {
+    "dims": (16, 64, 256),
+    "rows": (256, 4096),
+    "batches": (32,),
+    "poolings": (2, 8),
+}
+
+# moderate default grid for a real offline calibration run
+DEFAULT_GRID = {
+    "dims": (16, 64, 128, 256, 512),
+    "rows": (1024, 16384, 262144),
+    "batches": (1024, 16384),
+    "poolings": (2, 8, 32),
+}
+
+
+def default_artifact_path() -> str:
+    """Artifact location: ``$REPRO_CALIBRATION`` or the scratch dir that
+    CI caches between runs (gitignored)."""
+    return os.environ.get("REPRO_CALIBRATION",
+                          os.path.join("artifacts", "calibration",
+                                       "calibration.npz"))
+
+
+def hardware_fingerprint() -> dict:
+    """What hardware produced a measurement (artifact staleness check)."""
+    import platform
+    import jax
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind,
+        "n_devices": len(devs),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+    }
+
+
+def _axis_weights(grid: np.ndarray, x: np.ndarray):
+    """Per-query ``(lo, hi, w)`` along one log2-spaced axis, clamped to
+    the grid range; a singleton axis contributes weight 0 at index 0."""
+    g = np.asarray(grid, dtype=np.float64)
+    x = np.clip(np.asarray(x, dtype=np.float64), g[0], g[-1])
+    if g.size == 1:
+        z = np.zeros(x.shape, dtype=np.int64)
+        return z, z, np.zeros(x.shape)
+    pos = np.interp(np.log2(np.maximum(x, 1e-9)), np.log2(g),
+                    np.arange(g.size, dtype=np.float64))
+    lo = np.minimum(pos.astype(np.int64), g.size - 2)
+    return lo, lo + 1, pos - lo
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """Measured (or synthetic) kernel/collective cost grids + provenance."""
+
+    dims: np.ndarray        # (Nd,) strictly increasing
+    rows: np.ndarray        # (Nr,)
+    batches: np.ndarray     # (Nb,)
+    poolings: np.ndarray    # (Np,)
+    fwd_ms: np.ndarray      # (Nd, Nr, Nb, Np)
+    bwd_ms: np.ndarray      # (Nd, Nr, Nb, Np)
+    comm: CommModel
+    fingerprint: dict
+    version: int = CALIBRATION_VERSION
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for name in ("dims", "rows", "batches", "poolings"):
+            g = np.asarray(getattr(self, name), dtype=np.float64)
+            if g.ndim != 1 or g.size == 0 or np.any(np.diff(g) <= 0) \
+                    or g[0] <= 0:
+                raise ValueError(f"{name} must be positive and strictly "
+                                 f"increasing, got {g}")
+            setattr(self, name, g)
+        shape = (self.dims.size, self.rows.size, self.batches.size,
+                 self.poolings.size)
+        self.fwd_ms = np.asarray(self.fwd_ms, dtype=np.float64)
+        self.bwd_ms = np.asarray(self.bwd_ms, dtype=np.float64)
+        if self.fwd_ms.shape != shape or self.bwd_ms.shape != shape:
+            raise ValueError(f"cost grids must have shape {shape}, got "
+                             f"{self.fwd_ms.shape} / {self.bwd_ms.shape}")
+
+    # ---- interpolation -----------------------------------------------------
+
+    def _interp(self, table: np.ndarray, dim, rows, batch, pooling):
+        q = np.broadcast_arrays(np.asarray(dim, np.float64),
+                                np.asarray(rows, np.float64),
+                                np.asarray(batch, np.float64),
+                                np.asarray(pooling, np.float64))
+        axes = (self.dims, self.rows, self.batches, self.poolings)
+        los, his, ws = zip(*(_axis_weights(g, x) for g, x in zip(axes, q)))
+        out = np.zeros(q[0].shape)
+        for corner in itertools.product((0, 1), repeat=4):
+            idx = tuple(his[i] if c else los[i]
+                        for i, c in enumerate(corner))
+            w = np.ones(q[0].shape)
+            for i, c in enumerate(corner):
+                w = w * (ws[i] if c else 1.0 - ws[i])
+            out = out + w * table[idx]
+        return out
+
+    def fwd_lookup_ms(self, dim, rows, batch, pooling) -> np.ndarray:
+        """Interpolated forward kernel time (ms) per query (vectorized)."""
+        return self._interp(self.fwd_ms, dim, rows, batch, pooling)
+
+    def bwd_lookup_ms(self, dim, rows, batch, pooling) -> np.ndarray:
+        """Interpolated backward (scatter-add) time (ms) per query."""
+        return self._interp(self.bwd_ms, dim, rows, batch, pooling)
+
+    def comm_ms(self, payload_mb) -> np.ndarray:
+        """Fitted alpha-beta all-to-all time per per-device payload."""
+        return self.comm.comm_ms(payload_mb)
+
+    # ---- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        if not path.endswith(".npz"):
+            path += ".npz"                # np.savez appends it anyway
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        scalar = {"comm": self.comm.to_dict(),
+                  "fingerprint": self.fingerprint,
+                  "version": self.version,
+                  "meta": self.meta}
+        # atomic: an interrupted calibration must not leave a truncated
+        # artifact behind for the next loader
+        tmp = path + ".tmp.npz"
+        np.savez(tmp, dims=self.dims, rows=self.rows,
+                 batches=self.batches, poolings=self.poolings,
+                 fwd_ms=self.fwd_ms, bwd_ms=self.bwd_ms,
+                 scalar_json=np.array(json.dumps(scalar)))
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationTable":
+        with np.load(path, allow_pickle=False) as z:
+            scalar = json.loads(str(z["scalar_json"]))
+            if scalar["version"] > CALIBRATION_VERSION:
+                raise ValueError(
+                    f"calibration artifact {path} has version "
+                    f"{scalar['version']} > supported {CALIBRATION_VERSION};"
+                    " upgrade the code or re-calibrate")
+            return cls(dims=z["dims"], rows=z["rows"], batches=z["batches"],
+                       poolings=z["poolings"], fwd_ms=z["fwd_ms"],
+                       bwd_ms=z["bwd_ms"],
+                       comm=CommModel.from_dict(scalar["comm"]),
+                       fingerprint=scalar["fingerprint"],
+                       version=scalar["version"], meta=scalar["meta"])
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def measure(cls, *, dims=None, rows=None, batches=None, poolings=None,
+                use_pallas: bool | None = None, warmup: int = 1,
+                repeats: int = 5, seed: int = 0,
+                spec: HardwareSpec = PAPER_GPU,
+                comm: CommModel | None = None,
+                progress=None, meta: dict | None = None
+                ) -> "CalibrationTable":
+        """Run the full offline calibration: kernel sweep + comm fit."""
+        from repro.profiling import microbench
+        grid = {"dims": dims or DEFAULT_GRID["dims"],
+                "rows": rows or DEFAULT_GRID["rows"],
+                "batches": batches or DEFAULT_GRID["batches"],
+                "poolings": poolings or DEFAULT_GRID["poolings"]}
+        if use_pallas is None:
+            use_pallas = microbench.default_use_pallas()
+        if use_pallas:
+            # the Pallas kernel pads dims to 128 lanes, so sub-128 dims
+            # would all time the identical compiled shape -- collapse the
+            # dim axis to the padded dims actually measured, keeping the
+            # artifact truthful about its grid
+            from repro.kernels.embedding_bag.ops import pad_dim
+            grid["dims"] = tuple(sorted({pad_dim(int(d))
+                                         for d in grid["dims"]}))
+        fwd, bwd = microbench.sweep(grid["dims"], grid["rows"],
+                                    grid["batches"], grid["poolings"],
+                                    use_pallas=use_pallas, warmup=warmup,
+                                    repeats=repeats, seed=seed,
+                                    progress=progress)
+        if comm is None:
+            comm = calibrate_comm(spec=spec, warmup=warmup,
+                                  repeats=repeats, seed=seed)
+        return cls(dims=np.asarray(grid["dims"], np.float64),
+                   rows=np.asarray(grid["rows"], np.float64),
+                   batches=np.asarray(grid["batches"], np.float64),
+                   poolings=np.asarray(grid["poolings"], np.float64),
+                   fwd_ms=fwd, bwd_ms=bwd, comm=comm,
+                   fingerprint=hardware_fingerprint(),
+                   meta={"warmup": warmup, "repeats": repeats, "seed": seed,
+                         "use_pallas": bool(use_pallas), **(meta or {})})
+
+    @classmethod
+    def synthetic(cls, spec: HardwareSpec = PAPER_GPU, *, dims=None,
+                  rows=None, batches=None, poolings=None
+                  ) -> "CalibrationTable":
+        """Deterministic table from the analytic ``CostSimulator``: grid
+        cells are the simulator's noise-free per-table fused-op cost at
+        that shape (uniform access distribution).  No kernels run."""
+        from repro.core import features as F
+        from repro.sim.costsim import CostSimulator
+        grid = {"dims": dims or SMOKE_GRID["dims"],
+                "rows": rows or SMOKE_GRID["rows"],
+                "batches": batches or SMOKE_GRID["batches"],
+                "poolings": poolings or SMOKE_GRID["poolings"]}
+        g = {k: np.asarray(v, np.float64) for k, v in grid.items()}
+        shape = tuple(g[k].size for k in ("dims", "rows", "batches",
+                                          "poolings"))
+        fwd = np.zeros(shape)
+        bwd = np.zeros(shape)
+        dist = np.full((1, F.NUM_DIST_BINS), 1.0 / F.NUM_DIST_BINS)
+        for k, b in enumerate(g["batches"]):
+            sim = CostSimulator(spec, batch_size=int(b), noise_std=0.0)
+            for i, d in enumerate(g["dims"]):
+                for j, r in enumerate(g["rows"]):
+                    for l, p in enumerate(g["poolings"]):
+                        raw = F.pack_features([d], [r], [p], dist)
+                        fwd[i, j, k, l] = (spec.comp_overhead_ms
+                                           + sim.marginal_fwd_ms(raw)[0])
+                        bwd[i, j, k, l] = (spec.comp_overhead_ms
+                                           + sim.marginal_bwd_ms(raw)[0])
+        return cls(dims=g["dims"], rows=g["rows"], batches=g["batches"],
+                   poolings=g["poolings"], fwd_ms=fwd, bwd_ms=bwd,
+                   comm=CommModel.from_spec(spec),
+                   fingerprint={"backend": "synthetic", "device_kind": spec.name,
+                                "n_devices": 0, "platform": "analytic",
+                                "machine": "analytic"},
+                   meta={"source": "costsim", "spec": spec.name})
+
+    def summary(self) -> str:
+        n_pts = self.fwd_ms.size
+        return (f"CalibrationTable v{self.version}: {n_pts} kernel points "
+                f"(dims {self.dims.astype(int).tolist()}, "
+                f"rows {self.rows.astype(int).tolist()}, "
+                f"batches {self.batches.astype(int).tolist()}, "
+                f"poolings {self.poolings.astype(int).tolist()}), "
+                f"comm {self.comm.source} alpha={self.comm.alpha_ms:.4f}ms "
+                f"beta={self.comm.beta_ms_per_mb:.4f}ms/MB, "
+                f"hw={self.fingerprint.get('backend')}/"
+                f"{self.fingerprint.get('device_kind')}")
+
+
+def load_or_none(path: str | None = None) -> CalibrationTable | None:
+    """Load the artifact if present and readable, else ``None`` (a
+    corrupt/stale artifact means "re-measure", never a crash)."""
+    import zipfile
+    path = default_artifact_path() if path is None else path
+    if not os.path.exists(path):
+        return None
+    try:
+        return CalibrationTable.load(path)
+    except (ValueError, OSError, KeyError, json.JSONDecodeError,
+            zipfile.BadZipFile):
+        return None

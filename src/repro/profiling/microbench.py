@@ -1,0 +1,195 @@
+"""Compiled-kernel micro-benchmark harness for the embedding-bag op.
+
+AutoShard-style offline data collector: sweeps the fused
+``kernels/embedding_bag`` forward and scatter-add backward over a grid
+of ``(dim, rows, batch, pooling)`` shapes with proper warmup and
+median-of-k timing.  The resulting grid feeds a persisted
+``CalibrationTable`` (see ``repro.profiling.calibration``) that measured
+cost oracles *interpolate* -- kernels are timed once here, offline,
+never inside an ``evaluate`` call.
+
+``measure_placement`` preserves the old per-``evaluate`` live timing
+loop (the pre-subsystem ``KernelOracle`` behaviour) for validation and
+for the before/after comparison in ``benchmarks/b5_sim2real.py``.
+
+jax is imported lazily so the CLI and the calibration artifact loader
+stay light.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.sim.hardware import HardwareSpec, PAPER_GPU
+
+
+def default_use_pallas() -> bool:
+    """Compiled Pallas kernel on TPU, jnp reference elsewhere (the Pallas
+    op only *interprets* on CPU, which times the interpreter, not HW)."""
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def median_time_ms(fn, args, *, warmup: int = 1, repeats: int = 5) -> float:
+    """Median wall time (ms) of ``fn(*args)`` over ``repeats`` runs after
+    ``warmup`` untimed calls (the first of which pays compilation)."""
+    import jax
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchPoint:
+    """One measured grid point (times in milliseconds)."""
+
+    dim: int
+    rows: int
+    batch: int
+    pooling: int
+    fwd_ms: float
+    bwd_ms: float
+
+
+def make_inputs(dim: int, rows: int, batch: int, pooling: int,
+                seed: int = 0):
+    """(arena, indices, grad_out) for one benchmark shape.
+
+    Arena row 0 is the zero row (never indexed here); indices follow a
+    zipf-ish reuse pattern like real lookup streams, seeded for
+    reproducible index working sets.
+    """
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    arena = jnp.zeros((rows + 1, dim), jnp.float32)
+    draws = rng.zipf(1.5, size=(batch, pooling))
+    idx = jnp.asarray(1 + draws % rows, jnp.int32)
+    g = jnp.ones((batch, dim), jnp.float32)
+    return arena, idx, g
+
+
+def bench_shape(dim: int, rows: int, batch: int, pooling: int, *,
+                use_pallas: bool | None = None, warmup: int = 1,
+                repeats: int = 5, seed: int = 0) -> BenchPoint:
+    """Time the forward and backward kernels at one grid point."""
+    import jax
+    from repro.kernels.embedding_bag.ops import pad_dim
+    from repro.kernels.embedding_bag.ref import (embedding_bag_grad_ref,
+                                                 embedding_bag_ref)
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        from repro.kernels.embedding_bag.ops import embedding_bag
+        dim = pad_dim(dim)                 # Pallas lanes are 128-wide
+        fwd_fn = jax.jit(embedding_bag)
+    else:
+        fwd_fn = jax.jit(embedding_bag_ref)
+    bwd_fn = jax.jit(embedding_bag_grad_ref, static_argnums=0)
+
+    arena, idx, g = make_inputs(dim, rows, batch, pooling, seed=seed)
+    fwd_ms = median_time_ms(fwd_fn, (arena, idx),
+                            warmup=warmup, repeats=repeats)
+    bwd_ms = median_time_ms(bwd_fn, (arena.shape, idx, g),
+                            warmup=warmup, repeats=repeats)
+    return BenchPoint(dim=int(dim), rows=int(rows), batch=int(batch),
+                      pooling=int(pooling), fwd_ms=fwd_ms, bwd_ms=bwd_ms)
+
+
+def sweep(dims, rows, batches, poolings, *, use_pallas: bool | None = None,
+          warmup: int = 1, repeats: int = 5, seed: int = 0,
+          progress=None) -> tuple[np.ndarray, np.ndarray]:
+    """Dense grid sweep -> ``(fwd_ms, bwd_ms)`` arrays of shape
+    ``(len(dims), len(rows), len(batches), len(poolings))``.
+
+    ``progress`` (optional) is called with each finished ``BenchPoint``.
+    """
+    shape = (len(dims), len(rows), len(batches), len(poolings))
+    fwd = np.zeros(shape)
+    bwd = np.zeros(shape)
+    for i, d in enumerate(dims):
+        for j, r in enumerate(rows):
+            for k, b in enumerate(batches):
+                for l, p in enumerate(poolings):
+                    pt = bench_shape(int(d), int(r), int(b), int(p),
+                                     use_pallas=use_pallas, warmup=warmup,
+                                     repeats=repeats, seed=seed)
+                    fwd[i, j, k, l] = pt.fwd_ms
+                    bwd[i, j, k, l] = pt.bwd_ms
+                    if progress is not None:
+                        progress(pt)
+    return fwd, bwd
+
+
+def measure_placement(raw: np.ndarray, assignment: np.ndarray,
+                      n_devices: int, *, spec: HardwareSpec = PAPER_GPU,
+                      batch_size: int = 64, pooling: int = 4,
+                      max_rows: int = 4096, repeats: int = 2,
+                      use_pallas: bool = False, seed: int = 0):
+    """LIVE per-placement measurement: the old ``KernelOracle.evaluate``
+    timing loop, preserved as a validation/baseline path.
+
+    Builds a per-device arena, synthesizes zipf-ish lookups, and times
+    forward + backward kernels for every device group -- slow and noisy
+    by construction (this is exactly what the calibration subsystem
+    replaces).  Communication reuses the simulator's analytic model.
+    """
+    import jax.numpy as jnp
+    from repro.core import features as F
+    from repro.kernels.embedding_bag.ref import (embedding_bag_grad_ref,
+                                                 embedding_bag_ref)
+    from repro.sim.costsim import CostSimulator, SimResult, placement_digest
+    if use_pallas:
+        from repro.kernels.embedding_bag.ops import embedding_bag
+
+    raw = np.asarray(raw, dtype=np.float64)
+    assignment = np.asarray(assignment)
+    rng = np.random.default_rng(
+        placement_digest(raw, assignment, n_devices) ^ seed)
+    dim = max(128, int(np.ceil(raw[:, F.DIM].max() / 128) * 128))
+    fwd = np.zeros(n_devices)
+    bwd = np.zeros(n_devices)
+    dim_sums = np.zeros(n_devices)
+
+    def _time_ms(fn, *args) -> float:
+        fn(*args).block_until_ready()            # warmup / compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
+    for d in range(n_devices):
+        sub = raw[assignment == d]
+        if sub.shape[0] == 0:
+            continue
+        rows = np.minimum(sub[:, F.HASH_SIZE].astype(np.int64), max_rows)
+        bases = np.concatenate([[1], 1 + np.cumsum(rows)[:-1]])
+        arena = jnp.zeros((1 + int(rows.sum()), dim), jnp.float32)
+        idx = np.zeros((batch_size * len(rows), pooling), np.int32)
+        for k, (b, r) in enumerate(zip(bases, rows)):
+            draws = rng.zipf(1.5, size=(batch_size, pooling))
+            lo = k * batch_size
+            idx[lo:lo + batch_size] = b + draws % r
+        idx = jnp.asarray(idx)
+        if use_pallas:
+            fwd[d] = _time_ms(embedding_bag, arena, idx)
+        else:
+            fwd[d] = _time_ms(embedding_bag_ref, arena, idx)
+        g = jnp.ones((idx.shape[0], dim), jnp.float32)
+        bwd[d] = _time_ms(embedding_bag_grad_ref, arena.shape, idx, g)
+        dim_sums[d] = sub[:, F.DIM].sum()
+
+    comm = CostSimulator(spec, noise_std=0.0).comm_ms(dim_sums, n_devices)
+    fwd_comm = (fwd.max() - fwd) + comm
+    overall = fwd.max() + 2.0 * comm.max() + bwd.max()
+    return SimResult(fwd_comp=fwd, bwd_comp=bwd, fwd_comm=fwd_comm,
+                     bwd_comm=comm, overall=float(overall))

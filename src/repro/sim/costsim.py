@@ -187,8 +187,11 @@ class CostSimulator:
 
     # ---- placement evaluation ------------------------------------------------
 
-    def _comm_ms(self, dim_sums: np.ndarray, n_devices: int) -> np.ndarray:
-        """Per-device all-to-all time given per-device output dim sums."""
+    def comm_ms(self, dim_sums: np.ndarray, n_devices: int) -> np.ndarray:
+        """Per-device all-to-all time given per-device output dim sums.
+
+        Public model surface (measured oracles and the live measurement
+        harness reuse it for the stages a single host cannot time)."""
         if n_devices <= 1:
             return np.zeros_like(dim_sums)
         payload = (self.batch_size * dim_sums * self.spec.bytes_per_elem
@@ -200,6 +203,13 @@ class CostSimulator:
                         self.spec.comm_overhead_ms + base
                         + self.spec.congestion * imbalance,
                         0.0)
+
+    def _comm_ms(self, dim_sums: np.ndarray, n_devices: int) -> np.ndarray:
+        """Deprecated private alias of ``comm_ms`` (kept for old callers)."""
+        import warnings
+        warnings.warn("CostSimulator._comm_ms is deprecated; use the public "
+                      "comm_ms", DeprecationWarning, stacklevel=2)
+        return self.comm_ms(dim_sums, n_devices)
 
     def _noise(self, key: int, shape) -> np.ndarray:
         if self.noise_std <= 0:
@@ -220,7 +230,7 @@ class CostSimulator:
             sub = raw[assignment == d]
             fwd[d], bwd[d] = self.fused_op_ms(sub)
             dim_sums[d] = sub[:, F.DIM].sum() if sub.shape[0] else 0.0
-        comm = self._comm_ms(dim_sums, n_devices)
+        comm = self.comm_ms(dim_sums, n_devices)
 
         key = placement_digest(raw, assignment, n_devices) & 0x7FFFFFFF
         fwd = fwd * self._noise(key ^ 1, fwd.shape)

@@ -79,6 +79,26 @@ def test_cached_oracle_hit_miss_counting(dlrm_pool, sim):
     assert oracle.num_evaluations == 3
 
 
+def test_cached_oracle_info_and_lru_eviction(dlrm_pool, sim):
+    oracle = CachedOracle(sim, max_entries=2)
+    a1, a2, a3 = (np.array(x) for x in
+                  ([0, 1, 0, 1], [1, 0, 1, 0], [0, 0, 1, 1]))
+    oracle.evaluate(dlrm_pool[:4], a1, 2)
+    oracle.evaluate(dlrm_pool[:4], a2, 2)
+    oracle.evaluate(dlrm_pool[:4], a1, 2)       # hit: a1 becomes most-recent
+    oracle.evaluate(dlrm_pool[:4], a3, 2)       # full: evicts a2, NOT a1
+    oracle.evaluate(dlrm_pool[:4], a1, 2)       # still cached (LRU, not FIFO)
+    assert oracle.num_evaluations == 3
+    oracle.evaluate(dlrm_pool[:4], a2, 2)       # evicted -> re-measured
+    assert oracle.num_evaluations == 4
+    info = oracle.info()
+    assert info["hits"] == 2 and info["misses"] == 4
+    assert info["entries"] == 2 and info["max_entries"] == 2
+    assert info["hit_rate"] == pytest.approx(2 / 6)
+    assert info["eviction"] == "lru"
+    assert CachedOracle(sim).info()["hit_rate"] == 0.0
+
+
 def test_kernel_oracle_smoke(dlrm_pool):
     oracle = KernelOracle(batch_size=8, pooling=2, max_rows=256, repeats=1)
     assert isinstance(oracle, CostOracle)

@@ -25,7 +25,7 @@ def test_comm_monotone_in_imbalance(sim):
     maxes = []
     for sums in ([256, 256, 256, 256], [192, 256, 320, 256],
                  [128, 128, 384, 384], [64, 64, 64, 832]):
-        comm = sim._comm_ms(np.array(sums, float), 4)
+        comm = sim.comm_ms(np.array(sums, float), 4)
         maxes.append(comm.max())
     assert all(a <= b + 1e-9 for a, b in zip(maxes, maxes[1:])), maxes
 
