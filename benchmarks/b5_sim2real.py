@@ -52,10 +52,7 @@ def get_table() -> tuple[CalibrationTable, float]:
 def costnet_mape(agent: DreamShard, samples: list[CostSample],
                  true_ms: np.ndarray) -> float:
     """MAPE of the agent's cost network vs measured overall cost (ms)."""
-    buf = agent.buffer
-    agent.buffer = samples
-    batch = agent._cost_batch(np.arange(len(samples)))
-    agent.buffer = buf
+    batch = agent._cost_batch(samples)
     feats, onehot, tmask, dmask, _, _ = map(jnp.asarray, batch)
     _, overall = N.cost_net_apply(agent.cost_params, feats, onehot,
                                   tmask, dmask)

@@ -27,6 +27,7 @@ MODULES = [
     "b3_reductions",          # App B.3: sum/max reduction comparison
     "b4_session_throughput",  # PlacementSession batched serving vs per-task
     "b5_sim2real",            # calibration + MeasuredOracle vs SimOracle
+    "b6_train_throughput",    # fused Algorithm-1 loop vs seed per-step loop
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

@@ -31,6 +31,36 @@ from repro.data.tasks import Task
 from repro.embedding.plan import build_plan
 
 
+def pad_feature_batch(entries, m_pad: int, b_pad: int | None = None):
+    """Pad per-task ``(feats (m, F), sizes (m,))`` pairs into one dense
+    batch: ``(feats (B, m_pad, F), sizes (B, m_pad), tmask (B, m_pad))``.
+
+    Rows beyond each task's table count (and whole batch rows beyond
+    ``len(entries)`` when ``b_pad`` over-allocates to a power of two) are
+    zero with ``tmask == 0``.  Shared by ``PlacementSession.place_many``
+    and the fused trainer's batched collect / RL task batches, so serving
+    and training pad identically.
+    """
+    B = len(entries) if b_pad is None else b_pad
+    feats = np.zeros((B, m_pad, FEAT.NUM_FEATURES), np.float32)
+    sizes = np.zeros((B, m_pad), np.float32)
+    tmask = np.zeros((B, m_pad), np.float32)
+    for j, (f, s) in enumerate(entries):
+        m = f.shape[0]
+        feats[j, :m] = f
+        sizes[j, :m] = s
+        tmask[j, :m] = 1.0
+    return feats, sizes, tmask
+
+
+def pad_device_mask(device_counts, d_pad: int) -> np.ndarray:
+    """(B, d_pad) mask with row b's first ``device_counts[b]`` entries 1."""
+    dmask = np.zeros((len(device_counts), d_pad), np.float32)
+    for j, d in enumerate(device_counts):
+        dmask[j, :d] = 1.0
+    return dmask
+
+
 class PlacementSession:
     """Long-lived serving handle for one trained DreamShard agent.
 
@@ -111,18 +141,13 @@ class PlacementSession:
             # pad the batch dim to a power of two with fully-masked rows so
             # differently-sized calls into the same bucket reuse one trace
             b_pad = 1 << max(0, B - 1).bit_length()
-            feats = np.zeros((b_pad, m_pad, FEAT.NUM_FEATURES), np.float32)
-            sizes = np.zeros((b_pad, m_pad), np.float32)
-            tmask = np.zeros((b_pad, m_pad), np.float32)
-            orders = []
-            for j, i in enumerate(idxs):
+            entries, orders = [], []
+            for i in idxs:
                 f, s, order = self.agent._inference_inputs(
                     tasks[i].raw_features)
-                m = f.shape[0]
-                feats[j, :m] = f[order]
-                sizes[j, :m] = s[order]
-                tmask[j, :m] = 1.0
+                entries.append((f[order], s[order]))
                 orders.append(order)
+            feats, sizes, tmask = pad_feature_batch(entries, m_pad, b_pad)
             fn = self._decode_fn(m_pad, n_devices, b_pad)
             actions, est = fn(self.agent.policy_params,
                               self.agent.cost_params, jnp.asarray(feats),

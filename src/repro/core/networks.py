@@ -165,8 +165,15 @@ def policy_table_reprs(params, feats):
     return mlp_apply(params["table_mlp"], feats)
 
 
-def policy_logits(params, dev_repr, q):
-    """(..., D, H) device sums + (..., D, 3) cost features -> (..., D) logits."""
+def policy_logits(params, dev_repr, q, dev_mask=None):
+    """(..., D, H) device sums + (..., D, 3) cost features -> (..., D) logits.
+
+    ``dev_mask`` (..., D) marks real devices; padding devices score a large
+    negative logit, so one trace padded to D_pad serves any device count.
+    """
     hc = mlp_apply(params["cost_mlp"], q)
     x = jnp.concatenate([dev_repr, hc], axis=-1)
-    return mlp_apply(params["head"], x)[..., 0]
+    logits = mlp_apply(params["head"], x)[..., 0]
+    if dev_mask is not None:
+        logits = jnp.where(dev_mask > 0, logits, -1e9)
+    return logits

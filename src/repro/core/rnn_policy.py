@@ -83,6 +83,11 @@ class RNNPolicyConfig:
     entropy_weight: float = 1e-3
     lr: float = 5e-4
     seed: int = 0
+    # estimated-cost head settings, forwarded to the shared rollout core
+    # (only consulted when use_cost is enabled, e.g. hybrid ablations;
+    # previously rollout_with_reprs silently used its own defaults)
+    reward_mode: str = "composed"
+    log_targets: bool = True
 
 
 class RNNPlacer:
@@ -118,7 +123,8 @@ class RNNPlacer:
             actions, _, _, _ = R.rollout_with_reprs(
                 params, params, h, feats, sizes, cap, key,
                 n_devices=n_devices, n_episodes=n_episodes, greedy=greedy,
-                use_cost=False)
+                use_cost=False, reward_mode=self.cfg.reward_mode,
+                log_targets=self.cfg.log_targets)
             return actions
 
         self._sample_fns[sig] = fn
@@ -134,7 +140,9 @@ class RNNPlacer:
             _, sum_logp, sum_ent, _ = R.rollout_with_reprs(
                 params, params, h, feats, sizes, cap,
                 jax.random.PRNGKey(0), n_devices=n_devices,
-                n_episodes=n_episodes, use_cost=False, actions_in=actions)
+                n_episodes=n_episodes, use_cost=False, actions_in=actions,
+                reward_mode=self.cfg.reward_mode,
+                log_targets=self.cfg.log_targets)
             return -jnp.mean(adv * sum_logp) - w_ent * jnp.mean(sum_ent)
 
         self._grad_fns[sig] = jax.jit(jax.grad(loss_fn))

@@ -30,15 +30,22 @@ from repro.core import networks as N
 NEG = -1e9
 
 
-def _legal_mask(mem, size_t, cap):
-    """(E, D) legality; if a row has no legal device, everything is legal."""
+def _legal_mask(mem, size_t, cap, dmask=None):
+    """(E, D) legality; if a row has no legal device, everything is legal.
+
+    ``dmask`` (D,) marks real devices -- padding devices are never legal,
+    and the no-legal-device fallback opens only the real ones.
+    """
     legal = (mem + size_t) <= cap
+    if dmask is not None:
+        legal = jnp.logical_and(legal, dmask > 0)
     any_legal = jnp.any(legal, axis=-1, keepdims=True)
-    return jnp.where(any_legal, legal, True)
+    fallback = (dmask > 0) if dmask is not None else jnp.bool_(True)
+    return jnp.where(any_legal, legal, fallback)
 
 
 def estimate_overall(cost_params, dev_cost, reward_mode: str,
-                     log_targets: bool = True):
+                     log_targets: bool = True, dmask=None):
     """Estimated episode cost from final cost-net device sums (E, D, H).
 
     "head": the paper's max-reduced overall head.
@@ -55,15 +62,18 @@ def estimate_overall(cost_params, dev_cost, reward_mode: str,
     inv = (lambda x: jnp.expm1(jnp.minimum(x, 12.0))) if log_targets \
         else (lambda x: x)
     if reward_mode == "head":
-        return inv(N.cost_overall_head(cost_params, dev_cost))
+        return inv(N.cost_overall_head(cost_params, dev_cost, dmask))
     q = N.cost_device_heads(cost_params, dev_cost)        # (E, D, 3)
+    if dmask is not None:                 # padding devices must not win max
+        q = jnp.where(dmask[..., None] > 0, q, NEG)
     mx = inv(q.max(axis=-2))                              # (E, 3)
     return mx[..., 0] + mx[..., 1] + 2.0 * mx[..., 2]
 
 
 def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
                   n_devices, n_episodes, greedy, use_cost, actions_in=None,
-                  reward_mode="composed", log_targets=True, tmask=None):
+                  reward_mode="composed", log_targets=True, tmask=None,
+                  dmask=None):
     """Shared core.  If actions_in is given (E, M), replay those actions.
 
     ``tmask`` (M,) marks valid tables (1.0) vs padding rows (0.0): padded
@@ -72,6 +82,12 @@ def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
     exactly the placement of its unpadded rollout (PlacementSession).  With
     ``tmask=None`` the computation is bit-identical to the unmasked
     original (no extra multiplies are traced).
+
+    ``dmask`` (D,) marks real devices vs padding devices: padding devices
+    score NEG in the policy logits (never selected, near-zero probability
+    mass), are excluded from the legality fallback, and cannot win the
+    device-max in the estimated cost -- so one trace padded to
+    ``D_pad = n_devices`` serves any real device count (fused trainer).
     """
     M = h_pol.shape[0]
     H = h_pol.shape[1]
@@ -88,8 +104,8 @@ def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
             q = jax.lax.stop_gradient(q)
         else:
             q = jnp.zeros((E, D, N.NUM_COST_FEATURES))
-        logits = N.policy_logits(policy_params, dev_pol, q)       # (E,D)
-        legal = _legal_mask(mem, sizes[t], cap)
+        logits = N.policy_logits(policy_params, dev_pol, q, dmask)  # (E,D)
+        legal = _legal_mask(mem, sizes[t], cap, dmask)
         logits = jnp.where(legal, logits, NEG)
         logp_all = jax.nn.log_softmax(logits, axis=-1)
         if replay:
@@ -122,7 +138,7 @@ def _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
     sum_ent = ent_seq.sum(axis=0)
     if use_cost:
         est_cost = estimate_overall(cost_params, dev_cost, reward_mode,
-                                    log_targets)
+                                    log_targets, dmask=dmask)
     else:   # no cost network (RNN baseline): no estimate available
         est_cost = jnp.zeros((E,))
     return actions, sum_logp, sum_ent, est_cost
@@ -186,26 +202,89 @@ decode_candidates_jit = functools.partial(
 
 def rollout_with_reprs(policy_params, cost_params, h_pol, feats, sizes, cap,
                        key, *, n_devices, n_episodes, greedy=False,
-                       use_cost=True, actions_in=None):
-    """Rollout with externally supplied policy table reprs (RNN baseline)."""
+                       use_cost=True, actions_in=None,
+                       reward_mode="composed", log_targets=True,
+                       tmask=None, dmask=None):
+    """Rollout with externally supplied policy table reprs (RNN baseline).
+
+    ``reward_mode`` / ``log_targets`` configure the estimated-cost head the
+    same way as ``rollout`` (they were previously swallowed here, so
+    callers always got the defaults); ``tmask`` / ``dmask`` enable padded
+    decodes for external-repr policies too.
+    """
     h_cost = N.cost_table_reprs(cost_params, feats) if use_cost else \
         jnp.zeros_like(h_pol)
     return _scan_rollout(policy_params, cost_params, h_pol, h_cost, sizes,
                          cap, key, n_devices, n_episodes, greedy, use_cost,
-                         actions_in=actions_in)
+                         actions_in=actions_in, reward_mode=reward_mode,
+                         log_targets=log_targets, tmask=tmask, dmask=dmask)
+
+
+# ---- batched (padded) table sort + collection --------------------------------
+
+def sort_tables(cost_params, feats, sizes, tmask):
+    """In-graph descending sort by predicted single-table cost (App. B.4.2).
+
+    Batched: feats (..., M, F), sizes/tmask (..., M).  Padding rows
+    (tmask == 0) sort last, so the first m sorted slots are exactly the
+    task's real tables.  The stable argsort of the negated costs matches
+    the host-side ``np.argsort(-costs, kind="stable")`` order used by the
+    per-task path.  Returns (order, feats, sizes, tmask), all sorted.
+    """
+    costs = N.predict_single_table_costs(cost_params, feats)      # (..., M)
+    costs = jnp.where(tmask > 0, costs, -jnp.inf)
+    order = jnp.argsort(-costs, axis=-1)
+    feats = jnp.take_along_axis(feats, order[..., None], axis=-2)
+    sizes = jnp.take_along_axis(sizes, order, axis=-1)
+    tmask = jnp.take_along_axis(tmask, order, axis=-1)
+    return order, feats, sizes, tmask
+
+
+@functools.partial(jax.jit, static_argnames=("n_episodes", "greedy",
+                                             "use_cost", "reward_mode",
+                                             "log_targets"))
+def collect_batched(policy_params, cost_params, feats, sizes, tmask, dmask,
+                    cap, keys, *, n_episodes: int = 1, greedy: bool = False,
+                    use_cost: bool = True, reward_mode: str = "composed",
+                    log_targets: bool = True):
+    """Sample placements for a whole padded task batch in ONE jitted call.
+
+    feats (B, M_pad, F) normalized but UNSORTED; sizes/tmask (B, M_pad);
+    dmask (B, D_pad); keys (B, 2).  Sorting happens in-graph, so the fused
+    trainer's collection stage costs one dispatch for all ``n_collect``
+    rollouts.  Returns (actions (B, E, M_pad) in sorted space, est (B, E),
+    order (B, M_pad)) -- invert with ``assignment[order[b, :m]] =
+    actions[b, e, :m]``.
+    """
+    order, feats, sizes, tmask = sort_tables(cost_params, feats, sizes, tmask)
+    n_devices = dmask.shape[-1]
+
+    def one(f, s, tm, dm, k):
+        h_pol = N.policy_table_reprs(policy_params, f)
+        h_cost = N.cost_table_reprs(cost_params, f)
+        a, _, _, est = _scan_rollout(
+            policy_params, cost_params, h_pol, h_cost, s, cap, k,
+            n_devices, n_episodes, greedy, use_cost,
+            reward_mode=reward_mode, log_targets=log_targets,
+            tmask=tm, dmask=dm)
+        return a, est
+
+    actions, est = jax.vmap(one)(feats, sizes, tmask, dmask, keys)
+    return actions, est, order
 
 
 # ---- REINFORCE on the estimated MDP (Eq. 2) ----------------------------------
 
 def _rl_loss(policy_params, cost_params, feats, sizes, cap, key,
              n_devices, n_episodes, w_entropy, use_cost,
-             reward_mode="composed", log_targets=True):
+             reward_mode="composed", log_targets=True, tmask=None,
+             dmask=None):
     h_pol = N.policy_table_reprs(policy_params, feats)
     h_cost = N.cost_table_reprs(cost_params, feats)
     _, sum_logp, sum_ent, est_cost = _scan_rollout(
         policy_params, cost_params, h_pol, h_cost, sizes, cap, key,
         n_devices, n_episodes, False, use_cost, reward_mode=reward_mode,
-        log_targets=log_targets)
+        log_targets=log_targets, tmask=tmask, dmask=dmask)
     reward = jax.lax.stop_gradient(-est_cost)                     # (E,)
     baseline = reward.mean()
     adv = reward - baseline
@@ -227,6 +306,52 @@ def make_rl_update(optimizer, *, n_devices, n_episodes, w_entropy=1e-3,
         policy_params = jax.tree.map(lambda p, u: p + u, policy_params, upd)
         return policy_params, opt_state, loss, reward
 
+    return update
+
+
+def make_fused_rl_update(optimizer, *, n_episodes, w_entropy=1e-3,
+                         use_cost=True, reward_mode="composed",
+                         log_targets=True):
+    """Build ONE jitted REINFORCE trainer covering a whole padded task batch.
+
+    The returned function scans ``n_steps = feats.shape[0]`` sequential
+    update steps (one pre-sampled task each) inside a single jit, with
+    params/opt-state donated.  Tables are padded to M_pad (tmask) and
+    devices to D_pad (dmask -> padding devices illegal in the policy
+    logits), so a SINGLE trace serves every task in the training set
+    regardless of its (n_tables, n_devices) -- this replaces the per-
+    ``(D, E)`` recompile cache of the per-step path.  Tasks are re-sorted
+    in-graph by predicted single-table cost (the cost net is frozen during
+    the policy stage, so sorting once per batch matches the per-step path).
+
+    ``update.traces[0]`` counts retraces (compile-count guard in tests).
+    """
+    traces = [0]
+
+    def _update(policy_params, opt_state, cost_params, feats, sizes, tmask,
+                dmask, cap, keys):
+        traces[0] += 1
+        n_devices = dmask.shape[-1]
+
+        def step(carry, xs):
+            pp, st = carry
+            f, s, tm, dm, k = xs
+            _, f, s, tm = sort_tables(cost_params, f, s, tm)
+            (loss, reward), grads = jax.value_and_grad(
+                _rl_loss, has_aux=True)(
+                    pp, cost_params, f, s, cap, k, n_devices, n_episodes,
+                    w_entropy, use_cost, reward_mode, log_targets, tm, dm)
+            upd, st = optimizer.update(grads, st, pp)
+            pp = jax.tree.map(lambda p, u: p + u, pp, upd)
+            return (pp, st), (loss, reward.mean())
+
+        (policy_params, opt_state), (losses, rewards) = jax.lax.scan(
+            step, (policy_params, opt_state),
+            (feats, sizes, tmask, dmask, keys))
+        return policy_params, opt_state, losses, rewards
+
+    update = jax.jit(_update, donate_argnums=(0, 1))
+    update.traces = traces
     return update
 
 

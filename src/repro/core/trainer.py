@@ -17,8 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.oracle import CostOracle, SimOracle, ensure_oracle
+from repro.api.session import pad_device_mask, pad_feature_batch
 from repro.core import features as F
 from repro.core import networks as N
+from repro.core import replay as RB
 from repro.core import rollout as R
 from repro.data.tasks import Task
 from repro.optim import adam, apply_updates, linear_decay
@@ -50,6 +52,15 @@ class DreamShardConfig:
     # candidate placements, keeping the lowest ESTIMATED cost -- still
     # hardware-free.  1 = paper-faithful pure argmax.
     inference_candidates: int = 16
+    # fused loop: device-resident replay ring + single-dispatch scan
+    # updates (one trace per stage covers every task shape); False falls
+    # back to the per-step Algorithm-1 loop (the numerical reference,
+    # see tests/test_fused_trainer.py and benchmarks/b6_train_throughput.py)
+    fused: bool = True
+    # replay ring capacity; None sizes it to hold every sample the
+    # configured run can collect (matching the per-step loop's unbounded
+    # list); smaller values overwrite the oldest samples
+    buffer_capacity: int | None = None
 
 
 @dataclasses.dataclass
@@ -93,6 +104,9 @@ class DreamShard:
         self.history: list[dict] = []
         self._placer = None      # cached repro.api placer (see as_placer)
         self._placer_sig = None
+        # device computations launched by the trainer loop (one per jitted
+        # call or eager op sequence) -- the b6 benchmark's dispatch metric
+        self.num_dispatches = 0
 
     def _rebuild_opt_and_caches(self):
         """(Re)create everything derived from the config: optimizers, their
@@ -105,8 +119,20 @@ class DreamShard:
         self._rl_opt = adam(linear_decay(self.cfg.lr, total_rl_steps))
         self.cost_opt_state = self._cost_opt.init(self.cost_params)
         self.rl_opt_state = self._rl_opt.init(self.policy_params)
-        self._rl_updates = {}    # (D, E) -> jitted update
+        self._rl_updates = {}    # (D, E) -> jitted update (per-step path)
         self._cost_update = self._build_cost_update()
+        self._prepared_cache = {}  # task index -> (feats_norm, sizes_gb)
+        # fused path: one trace per stage, any task shape (see replay.py /
+        # rollout.make_fused_rl_update); the ring is rebuilt lazily so a
+        # restore with changed target units starts from a clean buffer
+        self._ring: RB.ReplayBuffer | None = None
+        self._ring_host: tuple | None = None  # _host_sig() at last mirror
+        self._fused_cost_update = RB.make_fused_cost_update(self._cost_opt)
+        self._fused_rl_update = R.make_fused_rl_update(
+            self._rl_opt, n_episodes=self.cfg.n_episode,
+            w_entropy=self.cfg.entropy_weight,
+            use_cost=self.cfg.use_cost_features,
+            reward_mode=self.cfg.reward_mode, log_targets=self._log_targets)
 
     # ---- feature plumbing -----------------------------------------------------
 
@@ -117,6 +143,16 @@ class DreamShard:
         feats = F.normalize_features(raw)
         sizes = task.raw_features[:, F.TABLE_SIZE_GB].astype(np.float32)
         return feats, sizes
+
+    def _prepared_train(self, task_idx: int):
+        """``_prepared`` for a training-set task, memoized: the pool is
+        fixed, so each task normalizes once per config (cache cleared on
+        ``restore`` -- feature_drop may change)."""
+        hit = self._prepared_cache.get(task_idx)
+        if hit is None:
+            hit = self._prepared(self.tasks[task_idx])
+            self._prepared_cache[task_idx] = hit
+        return hit
 
     def _sorted_order(self, feats_norm: np.ndarray) -> np.ndarray:
         """Descending predicted single-table cost (App. B.4.2)."""
@@ -139,12 +175,28 @@ class DreamShard:
 
     # ---- Algorithm 1 stage 1: data collection ---------------------------------
 
+    def _record_sample(self, task: Task, feats_norm: np.ndarray,
+                       assignment: np.ndarray) -> CostSample:
+        res = self.oracle.evaluate(task.raw_features, assignment,
+                                   task.n_devices)
+        sample = CostSample(
+            feats_norm=feats_norm, assignment=assignment,
+            q=self.transform_targets(res.cost_features),
+            overall=float(self.transform_targets(res.overall)),
+            n_devices=task.n_devices)
+        self.buffer.append(sample)
+        return sample
+
     def collect(self):
+        if self.cfg.fused:
+            return self._collect_fused()
         cap = self.oracle.mem_capacity_gb
         for _ in range(self.cfg.n_collect):
-            task = self.tasks[self.rng.integers(len(self.tasks))]
-            feats, sizes = self._prepared(task)
+            ti = int(self.rng.integers(len(self.tasks)))
+            task = self.tasks[ti]
+            feats, sizes = self._prepared_train(ti)
             order = self._sorted_order(feats)
+            self.num_dispatches += 2          # sort + rollout
             actions, _ = R.rollout(
                 self.policy_params, self.cost_params,
                 jnp.asarray(feats[order]), jnp.asarray(sizes[order]), cap,
@@ -154,13 +206,37 @@ class DreamShard:
                 log_targets=self._log_targets)
             assignment = np.empty(task.n_tables, dtype=np.int64)
             assignment[order] = np.asarray(actions[0])
-            res = self.oracle.evaluate(task.raw_features, assignment,
-                                       task.n_devices)
-            self.buffer.append(CostSample(
-                feats_norm=feats, assignment=assignment,
-                q=self.transform_targets(res.cost_features),
-                overall=float(self.transform_targets(res.overall)),
-                n_devices=task.n_devices))
+            self._record_sample(task, feats, assignment)
+
+    def _collect_fused(self):
+        """All ``n_collect`` rollouts in ONE padded vmapped dispatch: sort
+        and decode happen in-graph (``rollout.collect_batched``), only the
+        oracle measurements run on the host."""
+        n = self.cfg.n_collect
+        if n == 0:
+            return
+        idxs = [int(self.rng.integers(len(self.tasks))) for _ in range(n)]
+        tasks = [self.tasks[i] for i in idxs]
+        keys = jnp.stack([self._next_key() for _ in range(n)])
+        prepared = [self._prepared_train(i) for i in idxs]
+        feats, sizes, tmask = pad_feature_batch(prepared, self._m_pad)
+        dmask = pad_device_mask([t.n_devices for t in tasks], self._d_pad)
+        actions, _, order = R.collect_batched(
+            self.policy_params, self.cost_params, jnp.asarray(feats),
+            jnp.asarray(sizes), jnp.asarray(tmask), jnp.asarray(dmask),
+            self.oracle.mem_capacity_gb, keys, n_episodes=1,
+            use_cost=self.cfg.use_cost_features,
+            reward_mode=self.cfg.reward_mode, log_targets=self._log_targets)
+        self.num_dispatches += 1
+        actions, order = np.asarray(actions), np.asarray(order)
+        appended = []
+        for j, task in enumerate(tasks):
+            m = task.n_tables
+            assignment = np.empty(m, dtype=np.int64)
+            assignment[order[j, :m]] = actions[j, 0, :m]
+            appended.append(self._record_sample(task, prepared[j][0],
+                                                assignment))
+        self._ring_extend(appended)
 
     # ---- Algorithm 1 stage 2: cost network update (Eq. 1) ---------------------
 
@@ -182,16 +258,21 @@ class DreamShard:
 
         return update
 
-    def _cost_batch(self, idx: np.ndarray):
-        B, Mp, Dp = len(idx), self._m_pad, self._d_pad
+    def _cost_batch(self, samples: list["CostSample"]):
+        """Pad an explicit sample list into dense cost-net training arrays
+        (feats, onehot, tmask, dmask, q_t, c_t).  Pads grow beyond the
+        training-suite shape when given larger held-out samples
+        (``cost_mse`` / benchmark probes)."""
+        B = len(samples)
+        Mp = max([self._m_pad] + [s.feats_norm.shape[0] for s in samples])
+        Dp = max([self._d_pad] + [s.n_devices for s in samples])
         feats = np.zeros((B, Mp, F.NUM_FEATURES), np.float32)
         onehot = np.zeros((B, Dp, Mp), np.float32)
         tmask = np.zeros((B, Mp), np.float32)
         dmask = np.zeros((B, Dp), np.float32)
         q_t = np.zeros((B, Dp, 3), np.float32)
         c_t = np.zeros((B,), np.float32)
-        for j, i in enumerate(idx):
-            s = self.buffer[i]
+        for j, s in enumerate(samples):
             m, d = s.feats_norm.shape[0], s.n_devices
             feats[j, :m] = s.feats_norm
             onehot[j, s.assignment, np.arange(m)] = 1.0
@@ -201,17 +282,99 @@ class DreamShard:
             c_t[j] = s.overall
         return feats, onehot, tmask, dmask, q_t, c_t
 
+    # ---- device-resident replay ring (fused path) -----------------------------
+
+    def _ring_capacity(self) -> int:
+        if self.cfg.buffer_capacity is not None:
+            return max(1, self.cfg.buffer_capacity)
+        return max(1, self.cfg.n_iterations * self.cfg.n_collect,
+                   len(self.buffer))
+
+    def _host_sig(self):
+        """Cheap identity signature of the host buffer the ring mirrors:
+        list object, length, and tail-sample object.  Catches wholesale
+        reassignment (``ds.buffer = other``), slice assignment
+        (``ds.buffer[:] = other``), and tail replacement -- in-place
+        mutation of an existing ``CostSample``'s arrays is NOT detected
+        (replace the sample object instead)."""
+        return (id(self.buffer), len(self.buffer),
+                id(self.buffer[-1]) if self.buffer else None)
+
+    def _ring_in_sync(self) -> bool:
+        return self._ring is not None and \
+            self._ring.count == len(self.buffer) and \
+            self._ring_host == self._host_sig()
+
+    def _ring_extend(self, samples: list["CostSample"]):
+        """Mirror freshly collected samples into the device ring (one
+        scatter); falls back to a full rebuild if the ring is stale.
+        ``self.buffer`` already contains ``samples`` as its tail."""
+        stale = self._ring is None or \
+            self._ring.count != len(self.buffer) - len(samples) or \
+            self._ring_host is None or \
+            self._ring_host[0] != id(self.buffer) or \
+            self._ring_host[1] != len(self.buffer) - len(samples)
+        if stale:
+            return self._sync_ring()
+        self._ring.append_batch(*self._cost_batch(samples))
+        self._ring_host = self._host_sig()
+        self.num_dispatches += 1
+
+    def _sync_ring(self):
+        """(Re)build the device ring from ``self.buffer``.  Normally a
+        no-op: ``collect`` appends to both in lockstep.  Needed when the
+        host buffer was assigned directly (e.g. fig7's frozen-buffer
+        sweeps) or invalidated by ``restore``."""
+        if self._ring_in_sync() and \
+                self._ring.capacity >= self._ring_capacity():
+            return
+        n = len(self.buffer)
+        cap = self._ring_capacity()
+        self._ring = RB.ReplayBuffer(cap, self._m_pad, self._d_pad)
+        self._ring_host = self._host_sig()
+        if n:
+            kept = self.buffer[-cap:]         # ring semantics: newest wins
+            self._ring.count = n - len(kept)  # so slots land at i % cap
+            self._ring.append_batch(*self._cost_batch(kept))
+            self.num_dispatches += 1
+
     def update_cost(self, n_steps: int | None = None):
         n_steps = n_steps if n_steps is not None else self.cfg.n_cost
+        if self.cfg.fused:
+            return self._update_cost_fused(n_steps)
         losses = []
         for _ in range(n_steps):
             idx = self.rng.integers(len(self.buffer),
                                     size=min(self.cfg.n_batch, len(self.buffer)))
-            batch = self._cost_batch(idx)
+            batch = self._cost_batch([self.buffer[i] for i in idx])
             self.cost_params, self.cost_opt_state, loss = self._cost_update(
                 self.cost_params, self.cost_opt_state, *map(jnp.asarray, batch))
+            self.num_dispatches += 1
             losses.append(float(loss))
         return float(np.mean(losses)) if losses else 0.0
+
+    def _update_cost_fused(self, n_steps: int):
+        """The whole Eq.-1 stage as ONE jitted scan over on-device
+        minibatches (replay.make_fused_cost_update): indices are drawn on
+        the host in the per-step loop's exact RNG order, the padded tail of
+        partially-filled minibatches is weight-masked, and params/opt-state
+        are donated."""
+        if n_steps == 0 or not self.buffer:
+            return 0.0
+        self._sync_ring()
+        size = self._ring.size
+        b = min(self.cfg.n_batch, size)
+        idx = np.zeros((n_steps, self.cfg.n_batch), np.int32)
+        w = np.zeros((n_steps, self.cfg.n_batch), np.float32)
+        for t in range(n_steps):
+            idx[t, :b] = self._ring.slots(self.rng.integers(size, size=b))
+            w[t, :b] = 1.0
+        self.cost_params, self.cost_opt_state, losses = \
+            self._fused_cost_update(self.cost_params, self.cost_opt_state,
+                                    self._ring.data, jnp.asarray(idx),
+                                    jnp.asarray(w))
+        self.num_dispatches += 1
+        return float(jnp.mean(losses))
 
     # ---- Algorithm 1 stage 3: policy update on the estimated MDP (Eq. 2) ------
 
@@ -229,13 +392,17 @@ class DreamShard:
 
     def update_policy(self, n_steps: int | None = None):
         n_steps = n_steps if n_steps is not None else self.cfg.n_rl
+        if self.cfg.fused:
+            return self._update_policy_fused(n_steps)
         cap = self.oracle.mem_capacity_gb
         rewards = []
         for _ in range(n_steps):
-            task = self.tasks[self.rng.integers(len(self.tasks))]
-            feats, sizes = self._prepared(task)
+            ti = int(self.rng.integers(len(self.tasks)))
+            task = self.tasks[ti]
+            feats, sizes = self._prepared_train(ti)
             order = self._sorted_order(feats)
             update = self._rl_update_fn(task.n_devices)
+            self.num_dispatches += 2          # sort + update
             self.policy_params, self.rl_opt_state, _, reward = update(
                 self.policy_params, self.rl_opt_state, self.cost_params,
                 jnp.asarray(feats[order]), jnp.asarray(sizes[order]), cap,
@@ -243,18 +410,43 @@ class DreamShard:
             rewards.append(float(np.mean(np.asarray(reward))))
         return float(np.mean(rewards)) if rewards else 0.0
 
+    def _update_policy_fused(self, n_steps: int):
+        """All ``n_rl`` REINFORCE steps as ONE jitted scan over a
+        pre-sampled padded task batch (rollout.make_fused_rl_update):
+        tables tmask'd to M_pad, devices dmask'd to D_pad, so a single
+        trace covers every (n_tables, n_devices) in the training set --
+        no per-shape recompile cache."""
+        if n_steps == 0:
+            return 0.0
+        idxs = [int(self.rng.integers(len(self.tasks)))
+                for _ in range(n_steps)]
+        tasks = [self.tasks[i] for i in idxs]
+        keys = jnp.stack([self._next_key() for _ in range(n_steps)])
+        prepared = [self._prepared_train(i) for i in idxs]
+        feats, sizes, tmask = pad_feature_batch(prepared, self._m_pad)
+        dmask = pad_device_mask([t.n_devices for t in tasks], self._d_pad)
+        self.policy_params, self.rl_opt_state, _, rewards = \
+            self._fused_rl_update(
+                self.policy_params, self.rl_opt_state, self.cost_params,
+                jnp.asarray(feats), jnp.asarray(sizes), jnp.asarray(tmask),
+                jnp.asarray(dmask), self.oracle.mem_capacity_gb, keys)
+        self.num_dispatches += 1
+        return float(np.mean(np.asarray(rewards)))
+
     # ---- full loop -------------------------------------------------------------
 
     def train(self, eval_tasks: list[Task] | None = None,
               log: bool = False):
         for it in range(self.cfg.n_iterations):
             t0 = time.perf_counter()
+            d0 = self.num_dispatches
             self.collect()
             cost_loss = self.update_cost()
             mean_reward = self.update_policy()
             entry = {"iteration": it, "cost_loss": cost_loss,
                      "mean_est_reward": mean_reward,
                      "wall_s": time.perf_counter() - t0,
+                     "dispatches": self.num_dispatches - d0,
                      "sim_evals": self.oracle.num_evaluations}
             if eval_tasks is not None:
                 entry["eval_cost_ms"] = self.evaluate_tasks(eval_tasks)
@@ -352,11 +544,7 @@ class DreamShard:
 
     def cost_mse(self, samples: list["CostSample"]) -> float:
         """Test MSE of the cost network on held-out cost samples (Fig 7)."""
-        import jax.numpy as jnp
-        idx_save, buf_save = None, self.buffer
-        self.buffer = samples
-        batch = self._cost_batch(np.arange(len(samples)))
-        self.buffer = buf_save
+        batch = self._cost_batch(samples)
         feats, onehot, tmask, dmask, q_t, c_t = map(jnp.asarray, batch)
         q, overall = N.cost_net_apply(self.cost_params, feats, onehot,
                                       tmask, dmask)

@@ -121,16 +121,35 @@ class CostSimulator:
                                    / np.maximum(denom, 1.0))
         return np.clip(reuse * capacity_frac, 0.0, self.HIT_CAP)
 
+    def _marginals(self, raw: np.ndarray,
+                   shared: bool = False) -> tuple[np.ndarray, np.ndarray]:
+        """(marginal fwd ms, marginal bwd ms) per table (M,), computed in
+        one pass: the reuse/working-set/cache-hit intermediates are shared
+        between the two stages (the split helpers recomputed them four
+        times per fused op, the hottest line of every ``evaluate``)."""
+        reuse, ws_bytes = self._reuse_and_ws(raw)
+        denom = ws_bytes.sum() if shared else np.maximum(ws_bytes, 1.0)
+        capacity_frac = np.minimum(1.0, self.spec.cache_bytes
+                                   / np.maximum(denom, 1.0))
+        hit = np.clip(reuse * capacity_frac, 0.0, self.HIT_CAP)
+        bw = self.spec.gather_bw_gbs * 1e9
+        # Blend cold and cached bandwidth.
+        blend = (1.0 - hit) / bw + hit / (bw * self.spec.cache_speedup)
+        pooled = self.batch_size * raw[:, F.POOLING]
+        fwd_bytes = pooled * raw[:, F.DIM] * self.spec.bytes_per_elem
+        # backward: read+write of unique rows, plus streaming the incoming
+        # gradients
+        touched = np.minimum(pooled * np.maximum(1e-3, 1.0 - reuse),
+                             raw[:, F.HASH_SIZE])
+        bwd_bytes = ((2.0 * touched + 0.25 * pooled)
+                     * raw[:, F.DIM] * self.spec.bytes_per_elem)
+        return (fwd_bytes * blend * 1e3,
+                bwd_bytes * blend * 1e3 * self.spec.bwd_comp_scale)
+
     def marginal_fwd_ms(self, raw: np.ndarray,
                         shared: bool = False) -> np.ndarray:
         """Marginal (overhead-free) forward gather time per table (M,)."""
-        bytes_moved = (self.batch_size * raw[:, F.POOLING] * raw[:, F.DIM]
-                       * self.spec.bytes_per_elem)
-        hit = self._cache_hit_rate(raw, shared=shared)
-        bw = self.spec.gather_bw_gbs * 1e9
-        # Blend cold and cached bandwidth.
-        secs = bytes_moved * ((1.0 - hit) / bw + hit / (bw * self.spec.cache_speedup))
-        return secs * 1e3
+        return self._marginals(raw, shared=shared)[0]
 
     def marginal_bwd_ms(self, raw: np.ndarray,
                         shared: bool = False) -> np.ndarray:
@@ -144,19 +163,7 @@ class CostSimulator:
         satisfy both, which is exactly the multi-stage trade-off DreamShard
         learns (paper Fig 1: fwd- vs bwd-bottlenecked placements differ).
         """
-        reuse, _ = self._reuse_and_ws(raw)
-        touched = np.minimum(
-            self.batch_size * raw[:, F.POOLING] * np.maximum(1e-3, 1.0 - reuse),
-            raw[:, F.HASH_SIZE])
-        # read+write of unique rows, plus streaming the incoming gradients
-        bytes_moved = ((2.0 * touched + 0.25 * self.batch_size
-                        * raw[:, F.POOLING])
-                       * raw[:, F.DIM] * self.spec.bytes_per_elem)
-        hit = self._cache_hit_rate(raw, shared=shared)
-        bw = self.spec.gather_bw_gbs * 1e9
-        secs = bytes_moved * ((1.0 - hit) / bw
-                              + hit / (bw * self.spec.cache_speedup))
-        return secs * 1e3 * self.spec.bwd_comp_scale
+        return self._marginals(raw, shared=shared)[1]
 
     def _pipeline_eff(self, k: np.ndarray) -> np.ndarray:
         k = np.maximum(k, 1)
@@ -175,8 +182,9 @@ class CostSimulator:
             return 0.0, 0.0
         ranks = np.arange(1, raw_subset.shape[0] + 1)
         eff = self._pipeline_eff(ranks)
-        mf = np.sort(self.marginal_fwd_ms(raw_subset, shared=True))[::-1]
-        mb = np.sort(self.marginal_bwd_ms(raw_subset, shared=True))[::-1]
+        mf, mb = self._marginals(raw_subset, shared=True)
+        mf = np.sort(mf)[::-1]
+        mb = np.sort(mb)[::-1]
         fwd = self.spec.comp_overhead_ms + float((mf / eff).sum())
         bwd = self.spec.comp_overhead_ms + float((mb / eff).sum())
         return fwd, bwd

@@ -1,0 +1,296 @@
+"""Fused Algorithm-1 loop: equivalence with the seed per-step loop,
+single-trace compile guarantees, device replay ring, and padded
+device-mask decoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.session import pad_device_mask, pad_feature_batch
+from repro.core import features as F
+from repro.core import networks as N
+from repro.core import replay as RB
+from repro.core import rollout as R
+from repro.core.trainer import CostSample, DreamShard, DreamShardConfig
+from repro.data.tasks import make_benchmark_suite, sample_tasks, split_pool
+from repro.sim.costsim import CostSimulator
+
+
+def _cfg(**kw):
+    base = dict(n_iterations=2, n_collect=6, n_cost=30, n_batch=8, n_rl=4,
+                n_episode=4)
+    base.update(kw)
+    return DreamShardConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def suite(dlrm_pool):
+    return make_benchmark_suite(dlrm_pool, n_tables=12, n_devices=4,
+                                n_tasks=6)
+
+
+@pytest.fixture(scope="module")
+def mixed_suite(dlrm_pool):
+    """Heterogeneous training set: different table AND device counts."""
+    train_ids, _ = split_pool(dlrm_pool, seed=0)
+    return (sample_tasks(dlrm_pool, train_ids, 10, 2, 3, seed=1)
+            + sample_tasks(dlrm_pool, train_ids, 14, 4, 3, seed=2))
+
+
+# ---- fused vs seed equivalence ------------------------------------------------
+
+
+def test_fused_matches_seed_loop(suite):
+    """Same seeds, same RNG consumption order -> the fused loop must land
+    on the seed loop's cost-loss and eval within tight tolerance (on CPU
+    the two are bitwise identical; tolerances absorb backend batching
+    differences)."""
+    train, test = suite
+    runs = {}
+    for fused in (True, False):
+        ds = DreamShard(train, CostSimulator(seed=0), _cfg(fused=fused))
+        ds.train(eval_tasks=test[:3])
+        runs[fused] = ds
+    f, s = runs[True], runs[False]
+    assert len(f.buffer) == len(s.buffer)
+    assert np.isclose(f.history[-1]["cost_loss"],
+                      s.history[-1]["cost_loss"], rtol=0.25)
+    assert np.isclose(f.history[-1]["eval_cost_ms"],
+                      s.history[-1]["eval_cost_ms"], rtol=0.02)
+    # both consumed the identical hardware budget
+    assert f.oracle.num_evaluations == s.oracle.num_evaluations
+
+
+def test_fused_collect_matches_seed_samples(suite):
+    """One collect stage from identical state: the batched padded decode
+    must produce the same measurements as the per-task loop (placements
+    are sampled from identical logits + keys)."""
+    train, _ = suite
+    agents = [DreamShard(train, CostSimulator(seed=0), _cfg(fused=fu))
+              for fu in (True, False)]
+    for ds in agents:
+        ds.collect()
+    f, s = agents
+    assert len(f.buffer) == len(s.buffer) == f.cfg.n_collect
+    same = [np.array_equal(a.assignment, b.assignment)
+            for a, b in zip(f.buffer, s.buffer)]
+    # bitwise-equal logits -> identical placements; allow rare FP flips
+    assert np.mean(same) >= 0.5
+    for a in f.buffer:
+        assert np.isfinite(a.overall)
+
+
+def test_fused_dispatch_counts(suite):
+    """The fused loop runs each stage in O(1) dispatches per iteration."""
+    train, _ = suite
+    ds = DreamShard(train, CostSimulator(seed=0), _cfg())
+    ds.train()
+    per_iter = ds.history[-1]["dispatches"]
+    assert per_iter <= 5, per_iter
+    ds2 = DreamShard(train, CostSimulator(seed=0), _cfg(fused=False))
+    ds2.train()
+    assert ds2.history[-1]["dispatches"] >= ds2.cfg.n_cost
+
+
+# ---- compile-count guard ------------------------------------------------------
+
+
+def test_single_trace_covers_mixed_shapes(mixed_suite):
+    """ONE fused trace serves tasks with different (n_tables, n_devices):
+    no per-shape recompile cache."""
+    ds = DreamShard(mixed_suite, CostSimulator(seed=0), _cfg())
+    ds.train()
+    assert ds._fused_rl_update.traces[0] == 1
+    assert ds._fused_cost_update.traces[0] == 1
+    assert ds._rl_updates == {}          # per-(D, E) cache never populated
+    # placements stay legal on every device count in the mix
+    sim = CostSimulator(seed=0)
+    for t in mixed_suite:
+        a = ds.place(t.raw_features, t.n_devices)
+        assert a.max() < t.n_devices
+        assert sim.legal(t.raw_features, a, t.n_devices)
+
+
+# ---- device replay ring -------------------------------------------------------
+
+
+def test_ring_buffer_wraps():
+    ring = RB.ReplayBuffer(capacity=4, m_pad=3, d_pad=2)
+    B, M, D = 6, 3, 2
+    feats = np.arange(B * M * F.NUM_FEATURES, dtype=np.float32).reshape(
+        B, M, F.NUM_FEATURES)
+    onehot = np.zeros((B, D, M), np.float32)
+    tmask = np.ones((B, M), np.float32)
+    dmask = np.ones((B, D), np.float32)
+    q = np.zeros((B, D, 3), np.float32)
+    overall = np.arange(B, dtype=np.float32)
+    ring.append_batch(feats, onehot, tmask, dmask, q, overall)
+    assert ring.count == 6 and ring.size == 4
+    # newest four samples (2..5) live at slots i % 4
+    got = np.asarray(ring.data["overall"])
+    np.testing.assert_array_equal(got, [4.0, 5.0, 2.0, 3.0])
+    # live-window indexing: sample_idx 0 is the oldest kept (global 2)
+    np.testing.assert_array_equal(ring.slots(np.arange(4)), [2, 3, 0, 1])
+
+
+def test_ring_overfull_batch_keeps_newest():
+    """One append larger than the ring must deterministically keep the
+    newest ``capacity`` samples (no duplicate-position scatter)."""
+    ring = RB.ReplayBuffer(capacity=3, m_pad=2, d_pad=2)
+    B = 8
+    overall = np.arange(B, dtype=np.float32)
+    ring.append_batch(np.zeros((B, 2, F.NUM_FEATURES), np.float32),
+                      np.zeros((B, 2, 2), np.float32),
+                      np.ones((B, 2), np.float32),
+                      np.ones((B, 2), np.float32),
+                      np.zeros((B, 2, 3), np.float32), overall)
+    assert ring.count == 8 and ring.size == 3
+    got = np.asarray(ring.data["overall"])        # slot = i % 3
+    np.testing.assert_array_equal(got, [6.0, 7.0, 5.0])
+
+
+def test_same_length_buffer_reassignment_resyncs(suite):
+    """Replacing ``ds.buffer`` with DIFFERENT samples of the same length
+    must rebuild the ring (sync is keyed on list identity, not just
+    count)."""
+    train, _ = suite
+    ds = DreamShard(train, CostSimulator(seed=0), _cfg())
+    ds.collect()
+    ds.update_cost(2)
+    old_overall = np.asarray(ds._ring.data["overall"]).copy()
+    replacement = [CostSample(feats_norm=s.feats_norm,
+                              assignment=s.assignment,
+                              q=s.q + 1.0, overall=s.overall + 1.0,
+                              n_devices=s.n_devices) for s in ds.buffer]
+    ds.buffer = replacement
+    ds.update_cost(2)
+    new_overall = np.asarray(ds._ring.data["overall"])
+    live = new_overall != 0
+    assert np.allclose(new_overall[live], old_overall[live] + 1.0)
+
+
+def test_update_cost_after_direct_buffer_assignment(suite):
+    """fig7 pattern: assign ``ds.buffer`` wholesale, then train the cost
+    net -- the fused path must resync its device ring transparently."""
+    train, _ = suite
+    donor = DreamShard(train, CostSimulator(seed=0), _cfg())
+    donor.collect()
+    ds = DreamShard(train, CostSimulator(seed=1),
+                    _cfg(n_collect=0, n_iterations=1))
+    ds.buffer = list(donor.buffer)
+    loss = ds.update_cost(10)
+    assert np.isfinite(loss) and loss > 0
+    assert ds._ring is not None and ds._ring.size == len(ds.buffer)
+    # loss matches the per-step loop fed the same buffer + seeds
+    ds2 = DreamShard(train, CostSimulator(seed=1),
+                     _cfg(n_collect=0, n_iterations=1, fused=False))
+    ds2.buffer = list(donor.buffer)
+    loss2 = ds2.update_cost(10)
+    assert np.isclose(loss, loss2, rtol=0.05)
+
+
+def test_cost_mse_takes_sample_list(suite):
+    """cost_mse consumes an explicit sample list (no buffer swapping) and
+    leaves the training buffer untouched."""
+    train, _ = suite
+    ds = DreamShard(train, CostSimulator(seed=0), _cfg())
+    ds.collect()
+    before = list(ds.buffer)
+    mse = ds.cost_mse(ds.buffer[:3])
+    assert np.isfinite(mse) and mse > 0
+    assert ds.buffer == before
+
+
+# ---- padded rollout machinery -------------------------------------------------
+
+
+def _toy(m=10, seed=0):
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.random((m, F.NUM_FEATURES)), jnp.float32)
+    sizes = jnp.asarray(rng.uniform(0.5, 2.0, m), jnp.float32)
+    return feats, sizes
+
+
+def test_device_padded_greedy_decode_exact():
+    """Greedy decode with devices padded+masked to D_pad returns the same
+    actions as the unpadded decode (padding devices never win argmax)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    pol, cost = N.policy_net_init(k1), N.cost_net_init(k2)
+    feats, sizes = _toy()
+    h_pol = N.policy_table_reprs(pol, feats)
+    h_cost = N.cost_table_reprs(cost, feats)
+    a_ref, _, _, _ = R._scan_rollout(pol, cost, h_pol, h_cost, sizes, 100.0,
+                                     jax.random.PRNGKey(0), 3, 1, True, True)
+    dmask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    a_pad, _, _, est = R._scan_rollout(pol, cost, h_pol, h_cost, sizes,
+                                       100.0, jax.random.PRNGKey(0), 6, 1,
+                                       True, True, dmask=dmask)
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_pad))
+    assert int(np.asarray(a_pad).max()) < 3
+    assert np.isfinite(np.asarray(est)).all()
+
+
+def test_sort_tables_matches_host_order():
+    cost = N.cost_net_init(jax.random.PRNGKey(1))
+    feats, sizes = _toy(m=8)
+    m_pad = 12
+    fp = jnp.zeros((m_pad, F.NUM_FEATURES)).at[:8].set(feats)
+    sp = jnp.zeros((m_pad,)).at[:8].set(sizes)
+    tm = jnp.zeros((m_pad,)).at[:8].set(1.0)
+    order, f_s, s_s, t_s = R.sort_tables(cost, fp, sp, tm)
+    host = np.argsort(-np.asarray(
+        N.predict_single_table_costs(cost, feats)), kind="stable")
+    np.testing.assert_array_equal(np.asarray(order)[:8], host)
+    # padding rows sort last and stay masked
+    np.testing.assert_array_equal(np.asarray(t_s), [1.0] * 8 + [0.0] * 4)
+
+
+def test_collect_batched_heterogeneous_legal():
+    rng = np.random.default_rng(0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    pol, cost = N.policy_net_init(k1), N.cost_net_init(k2)
+    entries = [(rng.random((m, F.NUM_FEATURES)).astype(np.float32),
+                rng.uniform(0.2, 1.0, m).astype(np.float32))
+               for m in (6, 9, 12)]
+    feats, sizes, tmask = pad_feature_batch(entries, 12)
+    dmask = pad_device_mask([2, 4, 3], 4)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    actions, est, order = R.collect_batched(
+        pol, cost, jnp.asarray(feats), jnp.asarray(sizes),
+        jnp.asarray(tmask), jnp.asarray(dmask), 100.0, keys)
+    actions, order = np.asarray(actions), np.asarray(order)
+    for b, (f, _) in enumerate(entries):
+        m, d = f.shape[0], [2, 4, 3][b]
+        assignment = np.empty(m, np.int64)
+        assignment[order[b, :m]] = actions[b, 0, :m]
+        assert assignment.max() < d        # padded devices never selected
+    assert np.isfinite(np.asarray(est)).all()
+
+
+def test_rollout_with_reprs_plumbs_reward_mode():
+    """reward_mode / log_targets reach the estimate (satellite: they were
+    silently dropped before)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    pol, cost = N.policy_net_init(k1), N.cost_net_init(k2)
+    feats, sizes = _toy()
+    h = N.policy_table_reprs(pol, feats)
+    kw = dict(n_devices=4, n_episodes=2, greedy=True, use_cost=True)
+    _, _, _, est_composed = R.rollout_with_reprs(
+        pol, cost, h, feats, sizes, 100.0, jax.random.PRNGKey(0),
+        reward_mode="composed", **kw)
+    _, _, _, est_head = R.rollout_with_reprs(
+        pol, cost, h, feats, sizes, 100.0, jax.random.PRNGKey(0),
+        reward_mode="head", **kw)
+    assert not np.allclose(np.asarray(est_composed), np.asarray(est_head))
+
+
+def test_pad_feature_batch_shapes():
+    entries = [(np.ones((4, F.NUM_FEATURES), np.float32),
+                np.ones(4, np.float32))]
+    feats, sizes, tmask = pad_feature_batch(entries, 8, b_pad=2)
+    assert feats.shape == (2, 8, F.NUM_FEATURES)
+    np.testing.assert_array_equal(tmask[0], [1] * 4 + [0] * 4)
+    np.testing.assert_array_equal(tmask[1], np.zeros(8))
+    np.testing.assert_array_equal(
+        pad_device_mask([2, 4], 4), [[1, 1, 0, 0], [1, 1, 1, 1]])
