@@ -6,9 +6,12 @@ padded numpy minibatch), ``collect`` decodes one rollout per jit call
 (plus an eager per-task sort), and ``update_policy`` dispatches per step
 and retraces per ``(n_devices, n_episodes)`` shape.  The fused trainer
 (``DreamShardConfig(fused=True)``) runs each stage as ONE dispatch: a
-vmapped padded collect, a donated ``lax.scan`` over the device-resident
-replay ring, and a scan over a padded task batch for REINFORCE -- and the
-two loops are numerically equivalent (same RNG streams, same updates; see
+vmapped padded collect whose oracle measurements go through the batched
+``evaluate_many`` path (one vectorized pass per distinct task -- see
+``benchmarks/b7_oracle_throughput.py`` for the oracle-side numbers), a
+donated ``lax.scan`` over the device-resident replay ring, and a scan over
+a padded task batch for REINFORCE -- and the two loops are numerically
+equivalent (same RNG streams, same updates; see
 ``tests/test_fused_trainer.py``), so speedup comes with identical final
 eval cost.
 

@@ -1,0 +1,148 @@
+"""B7: oracle evaluation throughput -- per-placement loop vs evaluate_many.
+
+Search-heavy sharding lives on cost-query throughput: AutoShard amortizes
+measurement over thousands of candidate shardings and Pre-train-and-Search
+makes batched cost queries the engine of its search.  This benchmark
+measures what one task's P placements cost through each oracle backend,
+per-placement loop vs the batched ``evaluate_many`` path (the two are
+bitwise-identical; a prefix is asserted below), in two regimes:
+
+* ``paper`` -- P = 100, the neighborhood of the paper's per-iteration
+  collection budget (n_collect = 10..100);
+* ``scale``  -- P = 2000, the ``n_collect >= 1000`` regime that the batched
+  path exists for (acceptance: >= 10x placements/sec on the simulator).
+
+Oracles: ``sim`` (analytic simulator, noise on), ``measured``
+(calibration-table interpolation), and ``cached_half`` (CachedOracle with
+half the batch pre-warmed -- the partial-hit path).  Writes
+``BENCH_oracle.json`` (committed at the repo root; CI runs ``--smoke`` and
+uploads a fresh copy per run, like b6).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.api import CachedOracle, MeasuredOracle, SimOracle  # noqa: E402
+from repro.data.synthetic import make_dlrm_pool                # noqa: E402
+from repro.profiling.calibration import CalibrationTable       # noqa: E402
+from repro.sim.costsim import CostSimulator                    # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+N_TABLES = 20
+N_DEVICES = 4
+
+
+def _oracle_factories():
+    table = CalibrationTable.synthetic()
+    return {
+        "sim": lambda: SimOracle(CostSimulator(seed=0)),
+        "measured": lambda: MeasuredOracle(table),
+        "cached_half": lambda: CachedOracle(CostSimulator(seed=0)),
+    }
+
+
+def _check_bitwise(make_oracle, raw, A):
+    batch = make_oracle().evaluate_many(raw, A, N_DEVICES)
+    loop_oracle = make_oracle()
+    for b, a in zip(batch, A):
+        l = loop_oracle.evaluate(raw, a, N_DEVICES)
+        assert b.overall == l.overall and \
+            np.array_equal(b.fwd_comp, l.fwd_comp), \
+            "batched result diverged from the sequential loop"
+
+
+def _bench_oracle(name, make_oracle, raw, A, repeats):
+    P = A.shape[0]
+    loop_s, batch_s = [], []
+    for _ in range(repeats):
+        oracle = make_oracle()
+        if name == "cached_half":           # pre-warm half: partial hits
+            oracle.evaluate_many(raw, A[: P // 2], N_DEVICES)
+        t0 = time.perf_counter()
+        for a in A:
+            oracle.evaluate(raw, a, N_DEVICES)
+        loop_s.append(time.perf_counter() - t0)
+
+        oracle = make_oracle()
+        if name == "cached_half":
+            oracle.evaluate_many(raw, A[: P // 2], N_DEVICES)
+        t0 = time.perf_counter()
+        oracle.evaluate_many(raw, A, N_DEVICES)
+        batch_s.append(time.perf_counter() - t0)
+    loop_med, batch_med = float(np.median(loop_s)), float(np.median(batch_s))
+    return {
+        "loop_s": round(loop_med, 4),
+        "batched_s": round(batch_med, 4),
+        "loop_placements_per_sec": round(P / loop_med, 1),
+        "batched_placements_per_sec": round(P / batch_med, 1),
+        "speedup": round(loop_med / batch_med, 1),
+    }
+
+
+def run(smoke: bool = False, out: str | None = None, repeats: int = 3):
+    pool = make_dlrm_pool(seed=0)
+    raw = pool[:N_TABLES]
+    rng = np.random.default_rng(0)
+    regimes = {"scale": 128} if smoke else {"paper": 100, "scale": 2000}
+    repeats = 1 if smoke else repeats
+
+    result = {
+        "benchmark": "b7_oracle_throughput",
+        "schema": 1,
+        "mode": "smoke" if smoke else "full",
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "repeats": repeats,
+        "task": {"n_tables": N_TABLES, "n_devices": N_DEVICES},
+        "host": {"cpu_count": os.cpu_count(), "numpy": np.__version__},
+        "regimes": {},
+    }
+    factories = _oracle_factories()
+    _check_bitwise(factories["sim"], raw,
+                   rng.integers(0, N_DEVICES, size=(8, N_TABLES)))
+    for regime, P in regimes.items():
+        A = rng.integers(0, N_DEVICES, size=(P, N_TABLES), dtype=np.int64)
+        rows = {}
+        for name, make_oracle in factories.items():
+            rows[name] = _bench_oracle(name, make_oracle, raw, A, repeats)
+            print({"regime": regime, "n_placements": P, "oracle": name,
+                   **rows[name]}, flush=True)
+        result["regimes"][regime] = {"n_placements": P, "oracles": rows}
+
+    head = result["regimes"]["scale"]["oracles"]["sim"]
+    result["headline"] = {
+        "regime": "scale",
+        "oracle": "sim",
+        "n_placements": result["regimes"]["scale"]["n_placements"],
+        "speedup": head["speedup"],
+        "batched_placements_per_sec": head["batched_placements_per_sec"],
+    }
+    if not smoke:
+        assert head["speedup"] >= 10.0, \
+            f"batched oracle only {head['speedup']}x the loop (target 10x)"
+    out = out or os.path.join(ROOT, "BENCH_oracle.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print({"headline": result["headline"], "written": os.path.abspath(out)},
+          flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny batch for CI: scale regime only, 1 repeat")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats; the metric is the median")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out, repeats=max(1, args.repeats))

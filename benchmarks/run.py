@@ -28,6 +28,7 @@ MODULES = [
     "b4_session_throughput",  # PlacementSession batched serving vs per-task
     "b5_sim2real",            # calibration + MeasuredOracle vs SimOracle
     "b6_train_throughput",    # fused Algorithm-1 loop vs seed per-step loop
+    "b7_oracle_throughput",   # batched evaluate_many vs per-placement loop
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

@@ -4,7 +4,9 @@ One interface over every placement strategy and cost backend:
 
 * ``CostOracle`` (protocol) with ``SimOracle`` / ``CachedOracle`` /
   ``MeasuredOracle`` / ``KernelOracle`` implementations --
-  `evaluate(raw, assignment, n_devices) -> SimResult` plus
+  `evaluate(raw, assignment, n_devices) -> SimResult` and the batched
+  `evaluate_many(raw, (P, M) assignments, n_devices)` (one vectorized
+  pass, bitwise-identical to P sequential calls) plus
   `mem_capacity_gb` / `num_evaluations`; ``MeasuredOracle``
   interpolates a persisted ``repro.profiling`` calibration artifact
   (measured kernel/collective costs, zero kernel launches per call);
@@ -18,9 +20,11 @@ See ``docs/api.md`` for usage and the migration guide.
 """
 
 from repro.api.oracle import (CachedOracle, CostOracle, KernelOracle,
-                              MeasuredOracle, SimOracle, ensure_oracle)
+                              MeasuredOracle, SimOracle, ensure_oracle,
+                              evaluate_many, legal_batch)
 from repro.api.placement import (BasePlacer, Placement, Placer,
-                                 evaluate_placements, evaluate_placer)
+                                 evaluate_placements, evaluate_placer,
+                                 measure_placements)
 from repro.api.placers import (DreamShardPlacer, ExpertPlacer, RNNPlacerAdapter,
                                RandomPlacer, make_baseline_placers)
 from repro.api.session import PlacementSession
@@ -30,5 +34,6 @@ __all__ = [
     "ExpertPlacer", "KernelOracle", "MeasuredOracle", "Placement",
     "PlacementSession", "Placer",
     "RNNPlacerAdapter", "RandomPlacer", "SimOracle", "ensure_oracle",
-    "evaluate_placements", "evaluate_placer", "make_baseline_placers",
+    "evaluate_many", "evaluate_placements", "evaluate_placer", "legal_batch",
+    "make_baseline_placers", "measure_placements",
 ]

@@ -31,7 +31,9 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core import features as F
-from repro.sim.costsim import CostSimulator, SimResult, placement_bytes
+from repro.sim.costsim import (CostSimulator, SimResult, assignments_legal,
+                               check_assignment_batch, per_device_sums,
+                               placement_bytes)
 from repro.sim.hardware import HardwareSpec, PAPER_GPU
 
 
@@ -54,6 +56,15 @@ class CostOracle(Protocol):
         """Measure one placement; the analogue of one benchmark run."""
         ...
 
+    def evaluate_many(self, raw: np.ndarray, assignments: np.ndarray,
+                      n_devices: int) -> list[SimResult]:
+        """Measure P placements of ONE task (shared ``raw``/``n_devices``)
+        in a single batched pass.  ``assignments`` is ``(P, M)``; results
+        follow row order and are bitwise-identical to P sequential
+        ``evaluate`` calls (same per-placement noise digests); counts P
+        hardware measurements."""
+        ...
+
 
 def ensure_oracle(sim_or_oracle) -> "CostOracle":
     """Accept a ``CostOracle`` or a bare ``CostSimulator`` (auto-wrap)."""
@@ -61,8 +72,39 @@ def ensure_oracle(sim_or_oracle) -> "CostOracle":
         return SimOracle(sim_or_oracle)
     if isinstance(sim_or_oracle, CostOracle):
         return sim_or_oracle
+    # pre-evaluate_many oracles (the protocol before this method existed):
+    # accept the legacy surface; `evaluate_many` consumers fall back to a
+    # per-placement loop for them
+    if all(hasattr(sim_or_oracle, a)
+           for a in ("evaluate", "mem_capacity_gb", "num_evaluations")):
+        return sim_or_oracle
     raise TypeError(
         f"expected a CostOracle or CostSimulator, got {type(sim_or_oracle)!r}")
+
+
+def evaluate_many(oracle, raw: np.ndarray, assignments: np.ndarray,
+                  n_devices: int) -> list[SimResult]:
+    """Batched measurement through any oracle: uses the oracle's
+    ``evaluate_many`` when it has one, else falls back to a sequential
+    per-placement loop (identical results either way)."""
+    assignments = check_assignment_batch(assignments, n_devices)
+    fn = getattr(oracle, "evaluate_many", None)
+    if fn is not None:
+        return fn(raw, assignments, n_devices)
+    return [oracle.evaluate(raw, a, n_devices) for a in assignments]
+
+
+def legal_batch(oracle, raw: np.ndarray, assignments: np.ndarray,
+                n_devices: int) -> np.ndarray:
+    """Vectorized ``(P,)`` memory-legality check through any oracle: uses
+    the oracle's own ``legal_batch`` when present, else the shared
+    bincount check against ``oracle.mem_capacity_gb``."""
+    fn = getattr(oracle, "legal_batch", None)
+    if fn is not None:
+        return fn(raw, assignments, n_devices)
+    sizes = np.asarray(raw, dtype=np.float64)[:, F.TABLE_SIZE_GB]
+    return assignments_legal(sizes, assignments, n_devices,
+                             oracle.mem_capacity_gb)
 
 
 class SimOracle:
@@ -82,8 +124,14 @@ class SimOracle:
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
         return self.sim.evaluate(raw, assignment, n_devices)
 
+    def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
+        return self.sim.evaluate_batch(raw, assignments, n_devices)
+
     def legal(self, raw, assignment, n_devices) -> bool:
         return self.sim.legal(raw, assignment, n_devices)
+
+    def legal_batch(self, raw, assignments, n_devices) -> np.ndarray:
+        return self.sim.legal_batch(raw, assignments, n_devices)
 
 
 class CachedOracle:
@@ -123,6 +171,26 @@ class CachedOracle:
             placement_bytes(raw, assignment, n_devices),
             digest_size=16).digest()
 
+    def _keys_batch(self, raw, assignments, n_devices) -> list[bytes]:
+        """Row-wise ``_key`` over a ``(P, M)`` batch, hashing the shared
+        ``raw`` prefix once (blake2b state copy per row)."""
+        import hashlib
+        r = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
+        a = np.ascontiguousarray(np.asarray(assignments, dtype=np.int64))
+        h0 = hashlib.blake2b(r.tobytes(), digest_size=16)
+        suffix = int(n_devices).to_bytes(8, "little")
+        keys = []
+        for row in a:
+            h = h0.copy()
+            h.update(row.tobytes() + suffix)
+            keys.append(h.digest())
+        return keys
+
+    def _store(self, key: bytes, res: SimResult):
+        if len(self._cache) >= self.max_entries:      # evict least-recent
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = res
+
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
         key = self._key(raw, assignment, n_devices)
         hit = self._cache.get(key)
@@ -133,10 +201,50 @@ class CachedOracle:
             return hit
         self.misses += 1
         res = self.inner.evaluate(raw, assignment, n_devices)
-        if len(self._cache) >= self.max_entries:      # evict least-recent
-            self._cache.pop(next(iter(self._cache)))
-        self._cache[key] = res
+        self._store(key, res)
         return res
+
+    def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
+        """Batched evaluation with partial cache hits: only the rows that
+        miss are forwarded (as one sub-batch) to the inner oracle's
+        ``evaluate_many``.  Duplicate rows within a batch are measured once
+        and count as hits thereafter -- exactly what a sequential loop over
+        ``evaluate`` would do, since the first occurrence populates the
+        cache.  Results follow input row order."""
+        assignments = check_assignment_batch(assignments, n_devices)
+        keys = self._keys_batch(raw, assignments, n_devices)
+        out: list[SimResult | None] = [None] * len(keys)
+        miss_slot: dict[bytes, int] = {}     # key -> index into miss batch
+        miss_rows: list[int] = []
+        for i, key in enumerate(keys):
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.hits += 1
+                del self._cache[key]                  # LRU: move to end
+                self._cache[key] = hit
+                out[i] = hit
+            elif key in miss_slot:                    # duplicate in batch
+                self.hits += 1
+            else:
+                self.misses += 1
+                miss_slot[key] = len(miss_rows)
+                miss_rows.append(i)
+        if miss_rows:
+            fresh = evaluate_many(self.inner, raw, assignments[miss_rows],
+                                  n_devices)
+            for key, slot in miss_slot.items():
+                self._store(key, fresh[slot])
+            for i, key in enumerate(keys):
+                if out[i] is None:
+                    out[i] = fresh[miss_slot[key]]
+        return out
+
+    def legal(self, raw, assignment, n_devices) -> bool:
+        return bool(self.legal_batch(
+            raw, np.asarray(assignment)[None, :], n_devices)[0])
+
+    def legal_batch(self, raw, assignments, n_devices) -> np.ndarray:
+        return legal_batch(self.inner, raw, assignments, n_devices)
 
     def info(self) -> dict:
         """Cache behaviour snapshot (hit rate, occupancy, policy)."""
@@ -210,41 +318,58 @@ class MeasuredOracle:
         return self._num_evaluations
 
     def per_table_ms(self, raw) -> tuple[np.ndarray, np.ndarray]:
-        """Interpolated (fwd, bwd) kernel ms per table -- (M,), (M,)."""
+        """Interpolated (fwd, bwd) kernel ms per table -- (M,), (M,).
+
+        Duplicate table shapes (common in production pools) interpolate
+        once: queries are deduplicated before hitting the grid, and the
+        fwd/bwd grids share one corner-weight computation
+        (``CalibrationTable.lookup_ms``)."""
         raw = np.asarray(raw, dtype=np.float64)
-        fwd = self.table.fwd_lookup_ms(raw[:, F.DIM], raw[:, F.HASH_SIZE],
-                                       self.batch_size, raw[:, F.POOLING])
-        bwd = self.table.bwd_lookup_ms(raw[:, F.DIM], raw[:, F.HASH_SIZE],
-                                       self.batch_size, raw[:, F.POOLING])
-        return fwd, bwd
+        q = raw[:, (F.DIM, F.HASH_SIZE, F.POOLING)]
+        uniq, inverse = np.unique(q, axis=0, return_inverse=True)
+        inverse = inverse.reshape(-1)   # numpy 2.x shape-change insurance
+        fwd, bwd = self.table.lookup_ms(uniq[:, 0], uniq[:, 1],
+                                        self.batch_size, uniq[:, 2])
+        return fwd[inverse], bwd[inverse]
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
-        self._num_evaluations += 1
+        return self.evaluate_many(
+            raw, np.asarray(assignment)[None, :], n_devices)[0]
+
+    def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
+        """All P placements in one pass: per-table kernel costs interpolate
+        once (they depend on the task, not the placement), per-device sums
+        are one bincount over the ``(P, M)`` assignment matrix, and the
+        alpha-beta comm model prices the whole ``(P, D)`` payload grid."""
         raw = np.asarray(raw, dtype=np.float64)
-        assignment = np.asarray(assignment, dtype=np.int64)
+        assignments = check_assignment_batch(assignments, n_devices)
+        P, _ = assignments.shape
+        if P == 0:
+            return []
+        self._num_evaluations += P
         per_fwd, per_bwd = self.per_table_ms(raw)
-        fwd = np.bincount(assignment, weights=per_fwd,
-                          minlength=n_devices)[:n_devices]
-        bwd = np.bincount(assignment, weights=per_bwd,
-                          minlength=n_devices)[:n_devices]
-        dim_sums = np.bincount(assignment, weights=raw[:, F.DIM],
-                               minlength=n_devices)[:n_devices]
+        fwd = per_device_sums(assignments, n_devices, per_fwd)
+        bwd = per_device_sums(assignments, n_devices, per_bwd)
+        dim_sums = per_device_sums(assignments, n_devices, raw[:, F.DIM])
         payload_mb = (self.batch_size * dim_sums * self.spec.bytes_per_elem
                       * (n_devices - 1) / n_devices / 1e6)
         comm = self.table.comm_ms(payload_mb)
         # reported fwd comm spans from each device's compute finish to the
         # synced end of the all-to-all (same convention as the simulator)
-        fwd_comm = (fwd.max() - fwd) + comm
-        overall = fwd.max() + 2.0 * comm.max() + bwd.max()
-        return SimResult(fwd_comp=fwd, bwd_comp=bwd, fwd_comm=fwd_comm,
-                         bwd_comm=comm, overall=float(overall))
+        fwd_comm = (fwd.max(axis=-1, keepdims=True) - fwd) + comm
+        overall = fwd.max(axis=-1) + 2.0 * comm.max(axis=-1) + bwd.max(axis=-1)
+        return [SimResult(fwd_comp=fwd[p], bwd_comp=bwd[p],
+                          fwd_comm=fwd_comm[p], bwd_comm=comm[p],
+                          overall=float(overall[p])) for p in range(P)]
 
     def legal(self, raw, assignment, n_devices) -> bool:
-        raw = np.asarray(raw, dtype=np.float64)
-        assignment = np.asarray(assignment, dtype=np.int64)
-        sizes = np.bincount(assignment, weights=raw[:, F.TABLE_SIZE_GB],
-                            minlength=n_devices)[:n_devices]
-        return bool((sizes <= self.mem_capacity_gb).all())
+        return bool(self.legal_batch(
+            raw, np.asarray(assignment)[None, :], n_devices)[0])
+
+    def legal_batch(self, raw, assignments, n_devices) -> np.ndarray:
+        sizes = np.asarray(raw, dtype=np.float64)[:, F.TABLE_SIZE_GB]
+        return assignments_legal(sizes, assignments, n_devices,
+                                 self.mem_capacity_gb)
 
 
 class KernelOracle:
@@ -336,3 +461,17 @@ class KernelOracle:
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
         return self.measured().evaluate(raw, assignment, n_devices)
+
+    def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
+        return self.measured().evaluate_many(raw, assignments, n_devices)
+
+    def legal(self, raw, assignment, n_devices) -> bool:
+        return bool(self.legal_batch(
+            raw, np.asarray(assignment)[None, :], n_devices)[0])
+
+    def legal_batch(self, raw, assignments, n_devices) -> np.ndarray:
+        # pure spec arithmetic -- must NOT touch measured(), which would
+        # run the lazy calibration sweep just to answer a memory probe
+        sizes = np.asarray(raw, dtype=np.float64)[:, F.TABLE_SIZE_GB]
+        return assignments_legal(sizes, assignments, n_devices,
+                                 self.spec.mem_capacity_gb)

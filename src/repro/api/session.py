@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.placement import Placement
+from repro.api.placement import Placement, measure_placements
 from repro.core import features as FEAT
 from repro.core import rollout as R
 from repro.data.tasks import Task
@@ -170,3 +170,14 @@ class PlacementSession:
 
     def place(self, task: Task) -> Placement:
         return self.place_many([task])[0]
+
+    def place_and_measure(self, tasks: list[Task], oracle
+                          ) -> tuple[list[Placement], np.ndarray]:
+        """Serve a suite end-to-end batched: bucketed decode
+        (``place_many``) followed by one grouped ``evaluate_many``
+        measurement pass per distinct (raw features, device count) --
+        both halves scale with vector width, not task count.  Returns
+        ``(placements, per-task measured ms)``."""
+        tasks = list(tasks)
+        placements = self.place_many(tasks)
+        return placements, measure_placements(oracle, tasks, placements)

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.oracle import CostOracle, SimOracle, ensure_oracle
+from repro.api.oracle import (CostOracle, SimOracle, ensure_oracle,
+                              evaluate_many, legal_batch)
 from repro.api.session import pad_device_mask, pad_feature_batch
 from repro.core import features as F
 from repro.core import networks as N
@@ -210,8 +211,10 @@ class DreamShard:
 
     def _collect_fused(self):
         """All ``n_collect`` rollouts in ONE padded vmapped dispatch: sort
-        and decode happen in-graph (``rollout.collect_batched``), only the
-        oracle measurements run on the host."""
+        and decode happen in-graph (``rollout.collect_batched``) and the
+        oracle measurements run through the batched ``evaluate_many`` path
+        (one vectorized pass per distinct task, instead of the last
+        remaining host-side per-placement loop)."""
         n = self.cfg.n_collect
         if n == 0:
             return
@@ -229,14 +232,57 @@ class DreamShard:
             reward_mode=self.cfg.reward_mode, log_targets=self._log_targets)
         self.num_dispatches += 1
         actions, order = np.asarray(actions), np.asarray(order)
-        appended = []
+        assignments = []
         for j, task in enumerate(tasks):
             m = task.n_tables
             assignment = np.empty(m, dtype=np.int64)
             assignment[order[j, :m]] = actions[j, 0, :m]
-            appended.append(self._record_sample(task, prepared[j][0],
-                                                assignment))
+            assignments.append(assignment)
+        appended = self._measure_collected(idxs, prepared, assignments)
+        self.buffer.extend(appended)
         self._ring_extend(appended)
+
+    def _measure_collected(self, idxs: list[int], prepared: list,
+                           assignments: list[np.ndarray]
+                           ) -> list["CostSample"]:
+        """Measure decoded placements through the oracle's batched path.
+
+        Placements of the same training task (``n_collect`` rollouts
+        usually revisit a small pool many times) are stacked into one
+        ``evaluate_many`` call -- bitwise the same measurements as the old
+        per-placement loop, in a fraction of the oracle calls -- and the
+        returned samples keep collection order, preserving the buffer
+        layout (and thus the minibatch RNG stream) exactly.  A vectorized
+        ``legal_batch`` check guards the padded decode: a memory-illegal
+        placement is legitimate on over-tight tasks (the rollout's
+        no-legal-device fallback) and is measured like the per-step loop
+        measures it, but an illegal row that uses a device id outside the
+        task's range means the padding mask is broken -- that one raises.
+        """
+        groups: dict[int, list[int]] = {}
+        for j, ti in enumerate(idxs):
+            groups.setdefault(ti, []).append(j)
+        samples: list[CostSample | None] = [None] * len(idxs)
+        for ti, js in groups.items():
+            task = self.tasks[ti]
+            batch = np.stack([assignments[j] for j in js])
+            ok = legal_batch(self.oracle, task.raw_features, batch,
+                             task.n_devices)
+            if not ok.all():
+                bad = batch[~ok]
+                if ((bad < 0) | (bad >= task.n_devices)).any():
+                    raise RuntimeError(
+                        "collection decoded a placement onto a padding "
+                        f"device for task {ti}: device masking is broken")
+            results = evaluate_many(self.oracle, task.raw_features, batch,
+                                    task.n_devices)
+            for j, res in zip(js, results):
+                samples[j] = CostSample(
+                    feats_norm=prepared[j][0], assignment=assignments[j],
+                    q=self.transform_targets(res.cost_features),
+                    overall=float(self.transform_targets(res.overall)),
+                    n_devices=task.n_devices)
+        return samples
 
     # ---- Algorithm 1 stage 2: cost network update (Eq. 1) ---------------------
 
@@ -330,6 +376,13 @@ class DreamShard:
             return
         n = len(self.buffer)
         cap = self._ring_capacity()
+        if self._ring is not None and cap > self._ring.capacity and \
+                self.cfg.buffer_capacity is None:
+            # training ran past the configured n_iterations * n_collect
+            # budget: grow geometrically, so continued training rebuilds
+            # (and retraces -- each ring shape is a fresh trace of the
+            # fused update) O(log n) times instead of at every step
+            cap = max(cap, 2 * self._ring.capacity)
         self._ring = RB.ReplayBuffer(cap, self._m_pad, self._d_pad)
         self._ring_host = self._host_sig()
         if n:

@@ -117,22 +117,35 @@ class CalibrationTable:
 
     # ---- interpolation -----------------------------------------------------
 
-    def _interp(self, table: np.ndarray, dim, rows, batch, pooling):
+    def _corner_weights(self, dim, rows, batch, pooling):
+        """Per-query corner indices and axis weights, shared by every grid
+        interpolated at the same query points."""
         q = np.broadcast_arrays(np.asarray(dim, np.float64),
                                 np.asarray(rows, np.float64),
                                 np.asarray(batch, np.float64),
                                 np.asarray(pooling, np.float64))
         axes = (self.dims, self.rows, self.batches, self.poolings)
         los, his, ws = zip(*(_axis_weights(g, x) for g, x in zip(axes, q)))
-        out = np.zeros(q[0].shape)
+        return q[0].shape, los, his, ws
+
+    def _interp_grids(self, tables, shape, los, his, ws):
+        """Multilinear blend of one or more grids over shared corner
+        weights: the 16 corner weight products are computed once however
+        many grids are queried."""
+        outs = [np.zeros(shape) for _ in tables]
         for corner in itertools.product((0, 1), repeat=4):
             idx = tuple(his[i] if c else los[i]
                         for i, c in enumerate(corner))
-            w = np.ones(q[0].shape)
+            w = np.ones(shape)
             for i, c in enumerate(corner):
                 w = w * (ws[i] if c else 1.0 - ws[i])
-            out = out + w * table[idx]
-        return out
+            for out, table in zip(outs, tables):
+                out += w * table[idx]
+        return outs
+
+    def _interp(self, table: np.ndarray, dim, rows, batch, pooling):
+        shape, los, his, ws = self._corner_weights(dim, rows, batch, pooling)
+        return self._interp_grids((table,), shape, los, his, ws)[0]
 
     def fwd_lookup_ms(self, dim, rows, batch, pooling) -> np.ndarray:
         """Interpolated forward kernel time (ms) per query (vectorized)."""
@@ -141,6 +154,16 @@ class CalibrationTable:
     def bwd_lookup_ms(self, dim, rows, batch, pooling) -> np.ndarray:
         """Interpolated backward (scatter-add) time (ms) per query."""
         return self._interp(self.bwd_ms, dim, rows, batch, pooling)
+
+    def lookup_ms(self, dim, rows, batch, pooling
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Interpolated ``(fwd, bwd)`` kernel times per query in ONE pass:
+        both grids share the corner-weight computation (the batched
+        ``MeasuredOracle`` hot path)."""
+        shape, los, his, ws = self._corner_weights(dim, rows, batch, pooling)
+        fwd, bwd = self._interp_grids((self.fwd_ms, self.bwd_ms),
+                                      shape, los, his, ws)
+        return fwd, bwd
 
     def comm_ms(self, payload_mb) -> np.ndarray:
         """Fitted alpha-beta all-to-all time per per-device payload."""

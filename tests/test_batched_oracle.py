@@ -1,0 +1,308 @@
+"""Batched oracle evaluation: batch-vs-loop bitwise equivalence across all
+four oracles, partial cache hits, batched legality, grouped placement
+measurement, and the dispatch/oracle-call guard on batched collection."""
+
+import numpy as np
+import pytest
+
+from repro.api import (CachedOracle, KernelOracle, MeasuredOracle, SimOracle,
+                       ensure_oracle, evaluate_many, evaluate_placer,
+                       legal_batch)
+from repro.api.placement import measure_placements
+from repro.core import features as F
+from repro.core.trainer import DreamShard, DreamShardConfig
+from repro.data.tasks import Task, sample_tasks, split_pool
+from repro.profiling.calibration import CalibrationTable
+from repro.sim.costsim import CostSimulator, placement_digests
+
+RESULT_FIELDS = ("fwd_comp", "bwd_comp", "fwd_comm", "bwd_comm")
+
+
+def _random_batch(rng, n_tables, n_devices, n_placements):
+    return rng.integers(0, n_devices, size=(n_placements, n_tables),
+                        dtype=np.int64)
+
+
+def _assert_results_bitwise(batch, loop):
+    assert len(batch) == len(loop)
+    for b, l in zip(batch, loop):
+        for f in RESULT_FIELDS:
+            np.testing.assert_array_equal(getattr(b, f), getattr(l, f))
+        assert b.overall == l.overall
+
+
+# ---- CostSimulator core -------------------------------------------------------
+
+
+def test_sim_batch_bitwise_matches_sequential_loop(dlrm_pool, rng):
+    """evaluate_batch == P sequential evaluate calls, bit for bit, noise
+    included (each row's noise is seeded from its own placement digest)."""
+    raw = dlrm_pool[:20]
+    A = _random_batch(rng, 20, 4, 48)
+    batch = CostSimulator(seed=0).evaluate_batch(raw, A, 4)
+    loop = [CostSimulator(seed=0).evaluate(raw, a, 4) for a in A]
+    _assert_results_bitwise(batch, loop)
+
+
+def test_sim_batch_rows_independent_of_batch_composition(dlrm_pool, rng):
+    """A row's measurement must not depend on what else is in the batch."""
+    raw = dlrm_pool[:12]
+    A = _random_batch(rng, 12, 3, 16)
+    full = CostSimulator(seed=0).evaluate_batch(raw, A, 3)
+    sub = CostSimulator(seed=0).evaluate_batch(raw, A[5:9], 3)
+    _assert_results_bitwise(sub, full[5:9])
+
+
+def test_sim_batch_duplicate_rows_identical(dlrm_pool):
+    raw = dlrm_pool[:8]
+    a = np.array([0, 1, 0, 1, 2, 3, 2, 3])
+    r1, r2 = CostSimulator(seed=0).evaluate_batch(raw, np.stack([a, a]), 4)
+    _assert_results_bitwise([r1], [r2])
+
+
+def test_sim_batch_counts_all_measurements(dlrm_pool, rng):
+    sim = CostSimulator(seed=0)
+    sim.evaluate_batch(dlrm_pool[:10], _random_batch(rng, 10, 4, 7), 4)
+    assert sim.num_evaluations == 7
+    sim.evaluate(dlrm_pool[:10], _random_batch(rng, 10, 4, 1)[0], 4)
+    assert sim.num_evaluations == 8
+
+
+def test_sim_batch_rejects_flat_assignment(dlrm_pool):
+    with pytest.raises(ValueError):
+        CostSimulator().evaluate_batch(dlrm_pool[:4], np.array([0, 1, 0, 1]),
+                                       2)
+
+
+def test_placement_digests_match_scalar(dlrm_pool, rng):
+    from repro.sim.costsim import placement_digest
+    raw = dlrm_pool[:9]
+    A = _random_batch(rng, 9, 4, 11)
+    batched = placement_digests(raw, A, 4)
+    scalar = [placement_digest(raw, a, 4) for a in A]
+    np.testing.assert_array_equal(batched, scalar)
+
+
+def test_legal_batch_matches_loop(dlrm_pool, sim, rng):
+    big = dlrm_pool[:10].copy()
+    big[:2, F.TABLE_SIZE_GB] = 7.0      # co-locating both overflows 11 GB
+    A = _random_batch(rng, 10, 2, 40)
+    batched = sim.legal_batch(big, A, 2)
+    loop = [sim.legal(big, a, 2) for a in A]
+    np.testing.assert_array_equal(batched, loop)
+    assert batched.any() and not batched.all()   # the case is non-trivial
+    # legality is a probe, not a measurement: malformed device ids are
+    # reported illegal instead of raising
+    bad = A[:2].copy()
+    bad[0, 0] = 2
+    np.testing.assert_array_equal(sim.legal_batch(big, bad, 2),
+                                  [False, batched[1]])
+
+
+# ---- oracle layer -------------------------------------------------------------
+
+
+def _oracles(dlrm_pool):
+    table = CalibrationTable.synthetic()
+    return {
+        "sim": SimOracle(CostSimulator(seed=0)),
+        "cached": CachedOracle(CostSimulator(seed=0)),
+        "measured": MeasuredOracle(table),
+        "kernel": KernelOracle(table=table),
+    }
+
+
+@pytest.mark.parametrize("name", ["sim", "cached", "measured", "kernel"])
+def test_oracle_evaluate_many_bitwise(dlrm_pool, rng, name):
+    """All four oracles: evaluate_many == sequential evaluate loop bitwise
+    (fresh oracle per path so cache state cannot mask a mismatch)."""
+    raw = dlrm_pool[:14]
+    A = _random_batch(rng, 14, 4, 24)
+    batch = _oracles(dlrm_pool)[name].evaluate_many(raw, A, 4)
+    loop_oracle = _oracles(dlrm_pool)[name]
+    loop = [loop_oracle.evaluate(raw, a, 4) for a in A]
+    _assert_results_bitwise(batch, loop)
+
+
+def test_cached_oracle_partial_hits(dlrm_pool, rng):
+    """Pre-warmed rows are served from cache; only the misses reach the
+    inner oracle (as one sub-batch), and results keep input order."""
+    raw = dlrm_pool[:10]
+    A = _random_batch(rng, 10, 4, 12)
+    oracle = CachedOracle(CostSimulator(seed=0))
+    warmed = [oracle.evaluate(raw, A[i], 4) for i in (0, 3, 7)]
+    inner_before = oracle.num_evaluations
+    results = oracle.evaluate_many(raw, A, 4)
+    assert oracle.num_evaluations == inner_before + 9    # only the misses
+    assert (oracle.hits, oracle.misses) == (3, 12)
+    for i, w in zip((0, 3, 7), warmed):
+        assert results[i] is w                           # served from cache
+    reference = CostSimulator(seed=0)
+    _assert_results_bitwise(results, [reference.evaluate(raw, a, 4)
+                                      for a in A])
+
+
+def test_cached_oracle_duplicates_within_batch(dlrm_pool):
+    """A placement repeated inside one batch is measured once -- the later
+    occurrences are hits, exactly like a sequential loop."""
+    raw = dlrm_pool[:6]
+    a1 = np.array([0, 1, 0, 1, 0, 1])
+    a2 = np.array([1, 0, 1, 0, 1, 0])
+    oracle = CachedOracle(CostSimulator(seed=0))
+    results = oracle.evaluate_many(raw, np.stack([a1, a2, a1, a1]), 2)
+    assert (oracle.hits, oracle.misses) == (2, 2)
+    assert oracle.num_evaluations == 2
+    assert results[0] is results[2] is results[3]
+
+
+def test_evaluate_many_helper_falls_back_to_loop(dlrm_pool, rng):
+    """Legacy oracles (pre-evaluate_many) still work through the helper
+    and through ensure_oracle."""
+
+    class LegacyOracle:
+        def __init__(self):
+            self.sim = CostSimulator(seed=0)
+
+        @property
+        def mem_capacity_gb(self):
+            return self.sim.spec.mem_capacity_gb
+
+        @property
+        def num_evaluations(self):
+            return self.sim.num_evaluations
+
+        def evaluate(self, raw, assignment, n_devices):
+            return self.sim.evaluate(raw, assignment, n_devices)
+
+    raw = dlrm_pool[:8]
+    A = _random_batch(rng, 8, 2, 5)
+    legacy = LegacyOracle()
+    assert ensure_oracle(legacy) is legacy
+    results = evaluate_many(legacy, raw, A, 2)
+    _assert_results_bitwise(results,
+                            [CostSimulator(seed=0).evaluate(raw, a, 2)
+                             for a in A])
+    ok = legal_batch(legacy, raw, A, 2)          # generic capacity fallback
+    np.testing.assert_array_equal(
+        ok, [CostSimulator(seed=0).legal(raw, a, 2) for a in A])
+
+
+# ---- grouped placement measurement --------------------------------------------
+
+
+def test_measure_placements_groups_by_task(dlrm_pool):
+    """Mixed suites (different table/device counts, repeated tasks) batch
+    per distinct task and keep per-task ordering."""
+    _, ids = split_pool(dlrm_pool, seed=0)
+    tasks = (sample_tasks(dlrm_pool, ids, 8, 2, 2, seed=1)
+             + sample_tasks(dlrm_pool, ids, 11, 4, 2, seed=2))
+    tasks = tasks + tasks[:2]                    # repeated tasks share a group
+    rng = np.random.default_rng(0)
+    from types import SimpleNamespace
+
+    from repro.core import baselines as B
+    placements = [
+        SimpleNamespace(assignment=B.random_place(
+            t.raw_features, t.n_devices, 11.0, rng)) for t in tasks]
+    oracle = SimOracle(CostSimulator(seed=0))
+    costs = measure_placements(oracle, tasks, placements)
+    reference = CostSimulator(seed=0)
+    expected = [reference.evaluate(t.raw_features, p.assignment, t.n_devices)
+                .overall for t, p in zip(tasks, placements)]
+    np.testing.assert_array_equal(costs, expected)
+    assert oracle.num_evaluations == len(tasks)
+
+
+def test_evaluate_placer_unchanged_by_batching(dlrm_pool):
+    """evaluate_placer through the batched path returns the same mean as
+    the sequential reference."""
+    from repro.api import RandomPlacer
+    _, ids = split_pool(dlrm_pool, seed=0)
+    tasks = sample_tasks(dlrm_pool, ids, 10, 4, 4, seed=3)
+    mean = evaluate_placer(SimOracle(CostSimulator(seed=0)), tasks,
+                           RandomPlacer(CostSimulator(seed=0), seed=1))
+    placer = RandomPlacer(CostSimulator(seed=0), seed=1)
+    reference = CostSimulator(seed=0)
+    expected = float(np.mean(
+        [reference.evaluate(t.raw_features, placer.place(t).assignment,
+                            t.n_devices).overall for t in tasks]))
+    assert mean == pytest.approx(expected, rel=1e-12)
+
+
+# ---- batched collection guard -------------------------------------------------
+
+
+class _SpyOracle:
+    """Counts how the trainer talks to the oracle."""
+
+    def __init__(self, sim):
+        self.inner = SimOracle(sim)
+        self.single_calls = 0
+        self.batched_calls = 0
+
+    @property
+    def mem_capacity_gb(self):
+        return self.inner.mem_capacity_gb
+
+    @property
+    def num_evaluations(self):
+        return self.inner.num_evaluations
+
+    def evaluate(self, raw, assignment, n_devices):
+        self.single_calls += 1
+        return self.inner.evaluate(raw, assignment, n_devices)
+
+    def evaluate_many(self, raw, assignments, n_devices):
+        self.batched_calls += 1
+        return self.inner.evaluate_many(raw, assignments, n_devices)
+
+    def legal_batch(self, raw, assignments, n_devices):
+        return self.inner.legal_batch(raw, assignments, n_devices)
+
+
+def test_fused_collect_survives_forced_illegal_decode(dlrm_pool):
+    """On a task too big for its devices, the rollout's no-legal-device
+    fallback legitimately produces memory-illegal placements; the fused
+    collect must measure them like the per-step loop does, not crash."""
+    raw = dlrm_pool[:6].copy()
+    raw[:, F.TABLE_SIZE_GB] = 8.0   # 48 GB onto 2x11 GB: always illegal
+    tasks = [Task.of(raw, 2)]
+    ds = DreamShard(tasks, CostSimulator(seed=0), DreamShardConfig(
+        n_iterations=1, n_collect=4, n_cost=2, n_batch=2, n_rl=1))
+    ds.collect()
+    assert len(ds.buffer) == 4
+    for s in ds.buffer:
+        assert np.isfinite(s.overall)
+        assert s.assignment.max() < 2   # never a padding device
+
+
+def test_kernel_oracle_legal_is_calibration_free(dlrm_pool):
+    """A memory-legality probe on a cold KernelOracle must not trigger
+    the lazy kernel calibration sweep."""
+    oracle = KernelOracle(batch_size=8, pooling=2, max_rows=256, repeats=1)
+    a = np.array([0, 1, 0, 1])
+    assert oracle.legal(dlrm_pool[:4], a, 2)
+    assert oracle.legal_batch(dlrm_pool[:4], a[None, :], 2).all()
+    assert oracle._measured is None     # no sweep ran
+
+
+def test_fused_collect_batches_oracle_and_dispatches(dlrm_pool):
+    """The batched collection stage is one decode dispatch plus one ring
+    scatter, and the oracle sees at most one batched call per distinct
+    task -- never a per-placement loop."""
+    _, ids = split_pool(dlrm_pool, seed=0)
+    tasks = sample_tasks(dlrm_pool, ids, 10, 4, 4, seed=1)
+    spy = _SpyOracle(CostSimulator(seed=0))
+    ds = DreamShard(tasks, spy, DreamShardConfig(
+        n_iterations=1, n_collect=12, n_cost=4, n_batch=4, n_rl=2))
+    d0 = ds.num_dispatches
+    ds.collect()
+    assert ds.num_dispatches - d0 <= 2          # decode + ring append
+    assert spy.single_calls == 0
+    assert 1 <= spy.batched_calls <= len(tasks)
+    assert spy.num_evaluations == 12
+    assert len(ds.buffer) == 12
+    # a second collect reuses the compiled decode: still O(1) dispatches
+    d1 = ds.num_dispatches
+    ds.collect()
+    assert ds.num_dispatches - d1 <= 2

@@ -150,6 +150,33 @@ def test_ring_overfull_batch_keeps_newest():
     np.testing.assert_array_equal(got, [6.0, 7.0, 5.0])
 
 
+def test_ring_grows_geometrically_past_budget(suite):
+    """Training past the configured ``n_iterations * n_collect`` budget
+    must grow the ring geometrically -- a handful of rebuild/retrace
+    events, not one per step (the PR 3 behaviour rebuilt at the old size
+    every update once the buffer outgrew it)."""
+    train, _ = suite
+    ds = DreamShard(train, CostSimulator(seed=0),
+                    _cfg(n_iterations=1, n_collect=4, n_cost=4))
+    ds.train()
+    assert ds._ring.capacity == 4               # sized to the budget
+    caps = []
+    for _ in range(5):                          # run well past the budget
+        ds.collect()
+        ds.update_cost()
+        caps.append(ds._ring.capacity)
+    assert len(ds.buffer) == 24
+    assert ds._ring.capacity >= len(ds.buffer)  # nothing evicted
+    assert ds._ring.size == len(ds.buffer)
+    # geometric growth: capacity doubles (8, 16, 32), so only ~log(n)
+    # distinct ring shapes -- and each fused-update trace is tied to a
+    # ring shape, so retraces stay logarithmic too
+    assert set(caps) == {8, 16, 32}
+    assert ds._fused_cost_update.traces[0] <= 4
+    # the grown ring still trains: losses stay finite
+    assert np.isfinite(ds.update_cost())
+
+
 def test_same_length_buffer_reassignment_resyncs(suite):
     """Replacing ``ds.buffer`` with DIFFERENT samples of the same length
     must rebuild the ring (sync is keyed on list identity, not just
