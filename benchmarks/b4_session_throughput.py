@@ -57,8 +57,9 @@ def run():
         return out, dt
 
     # --- cold: compile-inclusive, the fresh-process serving cost ---
-    per_task = lambda: [agent.place(t.raw_features, t.n_devices)
-                        for t in tasks]
+    def per_task():
+        return [agent.place(t.raw_features, t.n_devices) for t in tasks]
+
     a_per, t_cold_per = bench("per_task_place_cold", per_task)
 
     session = PlacementSession(agent)

@@ -112,6 +112,14 @@ def run():
                  "summary": table.summary()})
     print(rows[-1], flush=True)
 
+    # v2 artifacts carry the fused multi-table correction, so every
+    # MeasuredOracle below prices a device's tables as one fused op
+    # (benchmarks/b8_fusion_model.py quantifies the accuracy win)
+    rows.append({"variant": "fusion_model",
+                 "fwd": table.fusion_fwd.summary(),
+                 "bwd": table.fusion_bwd.summary()})
+    print(rows[-1], flush=True)
+
     # --- 1. evaluate throughput: interpolation vs the old live loop ------
     t = train_tasks[0]
     rng = np.random.default_rng(0)

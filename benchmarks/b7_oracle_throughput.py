@@ -54,9 +54,9 @@ def _check_bitwise(make_oracle, raw, A):
     batch = make_oracle().evaluate_many(raw, A, N_DEVICES)
     loop_oracle = make_oracle()
     for b, a in zip(batch, A):
-        l = loop_oracle.evaluate(raw, a, N_DEVICES)
-        assert b.overall == l.overall and \
-            np.array_equal(b.fwd_comp, l.fwd_comp), \
+        ref = loop_oracle.evaluate(raw, a, N_DEVICES)
+        assert b.overall == ref.overall and \
+            np.array_equal(b.fwd_comp, ref.fwd_comp), \
             "batched result diverged from the sequential loop"
 
 
@@ -88,11 +88,16 @@ def _bench_oracle(name, make_oracle, raw, A, repeats):
     }
 
 
-def run(smoke: bool = False, out: str | None = None, repeats: int = 3):
+def run(smoke: bool = False, out: str | None = None, repeats: int = 3,
+        regimes: list[str] | None = None):
     pool = make_dlrm_pool(seed=0)
     raw = pool[:N_TABLES]
     rng = np.random.default_rng(0)
-    regimes = {"scale": 128} if smoke else {"paper": 100, "scale": 2000}
+    selected = {"scale": 128} if smoke else {"paper": 100, "scale": 2000}
+    if regimes:
+        selected = {k: v for k, v in selected.items() if k in regimes}
+        if not selected:
+            raise SystemExit(f"no such regime(s) {regimes}")
     repeats = 1 if smoke else repeats
 
     result = {
@@ -108,7 +113,7 @@ def run(smoke: bool = False, out: str | None = None, repeats: int = 3):
     factories = _oracle_factories()
     _check_bitwise(factories["sim"], raw,
                    rng.integers(0, N_DEVICES, size=(8, N_TABLES)))
-    for regime, P in regimes.items():
+    for regime, P in selected.items():
         A = rng.integers(0, N_DEVICES, size=(P, N_TABLES), dtype=np.int64)
         rows = {}
         for name, make_oracle in factories.items():
@@ -117,11 +122,13 @@ def run(smoke: bool = False, out: str | None = None, repeats: int = 3):
                    **rows[name]}, flush=True)
         result["regimes"][regime] = {"n_placements": P, "oracles": rows}
 
-    head = result["regimes"]["scale"]["oracles"]["sim"]
+    head_name = "scale" if "scale" in result["regimes"] \
+        else next(iter(result["regimes"]))
+    head = result["regimes"][head_name]["oracles"]["sim"]
     result["headline"] = {
-        "regime": "scale",
+        "regime": head_name,
         "oracle": "sim",
-        "n_placements": result["regimes"]["scale"]["n_placements"],
+        "n_placements": result["regimes"][head_name]["n_placements"],
         "speedup": head["speedup"],
         "batched_placements_per_sec": head["batched_placements_per_sec"],
     }
@@ -144,5 +151,10 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None, help="output JSON path")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repeats; the metric is the median")
+    ap.add_argument("--regimes", default=None,
+                    help="comma-separated regime subset (e.g. 'scale'; CI "
+                         "runs the full-config scale regime so the bench "
+                         "gate can compare against the committed baseline)")
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out, repeats=max(1, args.repeats))
+    run(smoke=args.smoke, out=args.out, repeats=max(1, args.repeats),
+        regimes=args.regimes.split(",") if args.regimes else None)

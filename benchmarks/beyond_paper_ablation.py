@@ -7,10 +7,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from benchmarks import common as C
-from repro.core.trainer import DreamShardConfig
 
 
 def run():

@@ -1,0 +1,239 @@
+"""Benchmark-regression gate for CI.
+
+Compares a fresh benchmark JSON against its committed baseline and fails
+(non-zero exit) on a throughput regression or any eval-cost drift,
+instead of silently uploading artifacts.  Usage:
+
+    python benchmarks/check_bench.py \
+        --pair BENCH_train.json fresh/BENCH_train.json \
+        --pair BENCH_oracle.json fresh/BENCH_oracle.json \
+        --pair BENCH_fusion.json fresh/BENCH_fusion.json \
+        [--tolerance 0.25] [--exact-rtol 1e-6]
+
+Rules, per benchmark kind (detected from the "benchmark" field):
+
+- Throughput metrics are DIMENSIONLESS speedups (batched-vs-loop,
+  fused-vs-seed), so they compare across hosts; a fresh value more than
+  ``tolerance`` below baseline fails.  Host-dependent absolutes
+  (placements/sec, wall seconds) are never gated.
+- Eval metrics are deterministic model outputs; any drift beyond a
+  tight rtol fails.  Two knobs because the noise floors differ:
+  ``--eval-rtol`` covers trained-agent eval cost (goes through XLA, so
+  jax version and host microarchitecture move floats -- pass a looser
+  value for unpinned-jax legs) and ``--exact-rtol`` covers the fusion
+  benchmark's synthetic-oracle fingerprint (pure numpy, essentially
+  bit-stable everywhere).
+- Only regimes whose CONFIG matches between baseline and fresh are
+  compared (a smoke run with a different budget is not comparable);
+  if a pair has no comparable cell at all, the gate fails rather than
+  silently passing.
+- b8 additionally re-asserts the fusion invariant on the fresh run:
+  the fusion-aware MAPE must stay below the additive MAPE (full mode;
+  smoke runs carry too little sweep data to gate timing MAPEs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rel_drop(baseline: float, fresh: float) -> float:
+    return (baseline - fresh) / baseline if baseline > 0 else 0.0
+
+
+def _drift(baseline: float, fresh: float) -> float:
+    scale = max(abs(baseline), 1e-12)
+    return abs(fresh - baseline) / scale
+
+
+class Gate:
+    def __init__(
+        self, tolerance: float, eval_rtol: float, exact_rtol: float
+    ):
+        self.tolerance = tolerance
+        self.eval_rtol = eval_rtol
+        self.exact_rtol = exact_rtol
+        self.failures: list[str] = []
+        self.checked = 0
+
+    def throughput(self, name: str, baseline: float, fresh: float) -> None:
+        self.checked += 1
+        drop = _rel_drop(baseline, fresh)
+        status = "FAIL" if drop > self.tolerance else "ok"
+        print(
+            f"  [{status}] {name}: baseline {baseline:g} -> fresh "
+            f"{fresh:g} ({-drop:+.1%})"
+        )
+        if drop > self.tolerance:
+            self.failures.append(
+                f"{name} regressed {drop:.1%} (> {self.tolerance:.0%}): "
+                f"{baseline:g} -> {fresh:g}"
+            )
+
+    def _drift_check(
+        self, name: str, baseline: float, fresh: float, rtol: float
+    ) -> None:
+        self.checked += 1
+        drift = _drift(baseline, fresh)
+        status = "FAIL" if drift > rtol else "ok"
+        print(
+            f"  [{status}] {name}: baseline {baseline!r} vs fresh "
+            f"{fresh!r} (drift {drift:.2e})"
+        )
+        if drift > rtol:
+            self.failures.append(
+                f"{name} drifted {drift:.2e} (> rtol {rtol:g}): "
+                f"{baseline!r} -> {fresh!r}"
+            )
+
+    def eval_cost(self, name: str, baseline: float, fresh: float) -> None:
+        self._drift_check(name, baseline, fresh, self.eval_rtol)
+
+    def exact(self, name: str, baseline: float, fresh: float) -> None:
+        self._drift_check(name, baseline, fresh, self.exact_rtol)
+
+    def invariant(self, name: str, ok: bool, detail: str) -> None:
+        self.checked += 1
+        print(f"  [{'ok' if ok else 'FAIL'}] {name}: {detail}")
+        if not ok:
+            self.failures.append(f"{name} violated: {detail}")
+
+
+def _matched_regimes(baseline: dict, fresh: dict) -> list[str]:
+    """Regime names present in both files with identical configs."""
+    out = []
+    for name, base_reg in baseline.get("regimes", {}).items():
+        fresh_reg = fresh.get("regimes", {}).get(name)
+        if fresh_reg is None:
+            continue
+        keys = ("config", "n_placements")
+        if all(base_reg.get(k) == fresh_reg.get(k) for k in keys):
+            out.append(name)
+    return out
+
+
+def check_train(gate: Gate, baseline: dict, fresh: dict) -> None:
+    for regime in _matched_regimes(baseline, fresh):
+        b, f = baseline["regimes"][regime], fresh["regimes"][regime]
+        gate.throughput(
+            f"b6.{regime}.per_iteration_speedup",
+            b["per_iteration_speedup"],
+            f["per_iteration_speedup"],
+        )
+        for variant in ("seed", "fused"):
+            gate.eval_cost(
+                f"b6.{regime}.{variant}.eval_cost_ms",
+                b[variant]["eval_cost_ms"],
+                f[variant]["eval_cost_ms"],
+            )
+
+
+def check_oracle(gate: Gate, baseline: dict, fresh: dict) -> None:
+    for regime in _matched_regimes(baseline, fresh):
+        b = baseline["regimes"][regime]["oracles"]
+        f = fresh["regimes"][regime]["oracles"]
+        for oracle in b:
+            if oracle in f:
+                gate.throughput(
+                    f"b7.{regime}.{oracle}.speedup",
+                    b[oracle]["speedup"],
+                    f[oracle]["speedup"],
+                )
+
+
+def check_fusion(gate: Gate, baseline: dict, fresh: dict) -> None:
+    for key in ("mean_overall_fused", "mean_overall_additive"):
+        gate.exact(
+            f"b8.determinism.{key}",
+            baseline["determinism"][key],
+            fresh["determinism"][key],
+        )
+    if fresh.get("mode") == "full":
+        acc = fresh["accuracy"]
+        gate.invariant(
+            "b8.fusion_beats_additive",
+            acc["mape_fusion_aware"] < acc["mape_additive"],
+            f"fusion-aware MAPE {acc['mape_fusion_aware']} vs additive "
+            f"{acc['mape_additive']}",
+        )
+
+
+CHECKERS = {
+    "b6_train_throughput": check_train,
+    "b7_oracle_throughput": check_oracle,
+    "b8_fusion_model": check_fusion,
+}
+
+
+def check_pair(gate: Gate, baseline_path: str, fresh_path: str) -> None:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    kind = baseline.get("benchmark")
+    print(f"{kind}: {baseline_path} vs {fresh_path}")
+    if fresh.get("benchmark") != kind:
+        gate.failures.append(
+            f"{fresh_path} is {fresh.get('benchmark')!r}, baseline is "
+            f"{kind!r}"
+        )
+        return
+    checker = CHECKERS.get(kind)
+    if checker is None:
+        gate.failures.append(f"no checker for benchmark kind {kind!r}")
+        return
+    before = gate.checked
+    checker(gate, baseline, fresh)
+    if gate.checked == before:
+        gate.failures.append(
+            f"{fresh_path}: no comparable cells against {baseline_path} "
+            "(regime configs differ?) -- refusing to pass vacuously"
+        )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--pair",
+        nargs=2,
+        action="append",
+        metavar=("BASELINE", "FRESH"),
+        required=True,
+        help="committed baseline JSON and fresh run JSON",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="max relative throughput drop (default 0.25)",
+    )
+    ap.add_argument(
+        "--eval-rtol",
+        type=float,
+        default=5e-3,
+        help="max relative drift for trained-agent eval costs "
+        "(XLA-dependent; loosen for unpinned-jax legs)",
+    )
+    ap.add_argument(
+        "--exact-rtol",
+        type=float,
+        default=1e-6,
+        help="max relative drift for pure-numpy determinism fingerprints",
+    )
+    args = ap.parse_args(argv)
+    gate = Gate(args.tolerance, args.eval_rtol, args.exact_rtol)
+    for baseline_path, fresh_path in args.pair:
+        check_pair(gate, baseline_path, fresh_path)
+    if gate.failures:
+        print(f"\nbench gate: {len(gate.failures)} failure(s)")
+        for failure in gate.failures:
+            print(f"  - {failure}")
+        return 1
+    print(f"\nbench gate: {gate.checked} cells ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,8 +15,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.api import (ensure_oracle, evaluate_placer,
-                       make_baseline_placers)                  # noqa: E402
+from repro.api import (ensure_oracle, evaluate_placer,        # noqa: E402
+                       make_baseline_placers)
 from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig   # noqa: E402
 from repro.core.trainer import DreamShard, DreamShardConfig    # noqa: E402
 from repro.data.synthetic import make_dlrm_pool, make_prod_pool  # noqa: E402

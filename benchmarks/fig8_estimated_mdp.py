@@ -11,8 +11,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks import common as C
 from repro.core.trainer import DreamShard
 from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig

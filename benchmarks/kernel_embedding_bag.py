@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks import common as C
 from repro.kernels.embedding_bag import ops
 from repro.kernels.embedding_bag.kernel import embedding_bag_fused
 from repro.kernels.embedding_bag.ref import embedding_bag_ref

@@ -32,7 +32,6 @@ def experts_as_tables(n_experts, d_model, d_ff, rng):
 
 
 def main():
-    rng = np.random.default_rng(0)
     n_experts, d_model, d_ff, n_shards = 64, 2048, 1024, 8
 
     # build a pool of "expert tables" across many simulated routers

@@ -59,7 +59,8 @@ def train_with_placement(name, task, placement, args, oracle):
     dense_opt = adam(1e-3)
     emb_state = emb_opt.init({"arenas": params["arenas"]})
     dense_state = dense_opt.init({k: params[k] for k in ("bottom", "top")})
-    lookup = lambda a, b, i: E.lookup_unsharded(a, plan.base_rows, i, plan)
+    def lookup(a, b, i):
+        return E.lookup_unsharded(a, plan.base_rows, i, plan)
 
     @jax.jit
     def step(params, emb_state, dense_state, gidx, dense, labels):

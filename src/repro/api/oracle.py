@@ -265,17 +265,24 @@ class MeasuredOracle:
 
     * per-table forward/backward kernel time is log2-multilinear
       interpolation of the measured ``(dim, rows, batch, pooling)`` grid
-      (clamped at the grid edges), summed per device in O(tables);
+      (clamped at the grid edges);
+    * a device's K co-resident tables are priced as ONE fused op through
+      the artifact's fitted ``FusionModel`` (per-launch overhead
+      amortization + per-rank pipelining discount; the paper's Fig-12
+      point that fused cost != sum of per-table costs), in O(tables);
+      a v1 artifact has no fused sweep and falls back to the additive
+      per-table sum (with a load-time warning);
     * the all-to-all is the fitted alpha-beta model applied to each
       device's payload (``batch * dim_sum * bytes * (n-1)/n``).
 
     ``evaluate`` performs ZERO kernel launches, so the DreamShard
     trainer can collect cost-network data against measured hardware at
     full speed (see ``benchmarks/b5_sim2real.py`` for the throughput
-    win over the old per-call timing loop).  Fused-op pipelining is not
-    yet calibrated: per-device compute is the additive per-table model.
-    Measured milliseconds are comparable *within* one calibration
-    artifact, not with ``SimOracle`` numbers.
+    win over the old per-call timing loop, and
+    ``benchmarks/b8_fusion_model.py`` for the fusion-aware model's
+    accuracy against live-timed multi-table placements).  Measured
+    milliseconds are comparable *within* one calibration artifact, not
+    with ``SimOracle`` numbers.
 
     ``table`` may be a ``CalibrationTable``, a path to one, or ``None``
     (load the default artifact, see
@@ -284,12 +291,15 @@ class MeasuredOracle:
     and comm payload are priced at the same operating point (an explicit
     batch outside the grid is edge-clamped on the compute side while the
     comm payload keeps growing -- calibrate a matching batch instead).
+    ``fusion=False`` forces the additive per-table model regardless of
+    the artifact (the pre-v2 behaviour; b8's comparison baseline).
     """
 
     def __init__(self, table=None, *, batch_size: int | None = None,
                  spec: HardwareSpec = PAPER_GPU,
-                 mem_capacity_gb: float | None = None):
+                 mem_capacity_gb: float | None = None, fusion: bool = True):
         from repro.profiling.calibration import (CalibrationTable,
+                                                 FusionModel,
                                                  default_artifact_path)
         if table is None:
             path = default_artifact_path()
@@ -304,6 +314,12 @@ class MeasuredOracle:
         self.spec = spec
         self.batch_size = int(table.batches[-1]) if batch_size is None \
             else batch_size
+        if fusion:
+            self.fusion_fwd = table.fusion_fwd
+            self.fusion_bwd = table.fusion_bwd
+        else:
+            self.fusion_fwd = FusionModel.additive()
+            self.fusion_bwd = FusionModel.additive()
         self._mem_capacity_gb = (spec.mem_capacity_gb
                                  if mem_capacity_gb is None
                                  else mem_capacity_gb)
@@ -338,9 +354,10 @@ class MeasuredOracle:
 
     def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
         """All P placements in one pass: per-table kernel costs interpolate
-        once (they depend on the task, not the placement), per-device sums
-        are one bincount over the ``(P, M)`` assignment matrix, and the
-        alpha-beta comm model prices the whole ``(P, D)`` payload grid."""
+        once (they depend on the task, not the placement), each device's
+        tables are fused through the ``FusionModel`` (rank sort + segment
+        sums over the ``(P, M)`` assignment matrix), and the alpha-beta
+        comm model prices the whole ``(P, D)`` payload grid."""
         raw = np.asarray(raw, dtype=np.float64)
         assignments = check_assignment_batch(assignments, n_devices)
         P, _ = assignments.shape
@@ -348,8 +365,15 @@ class MeasuredOracle:
             return []
         self._num_evaluations += P
         per_fwd, per_bwd = self.per_table_ms(raw)
-        fwd = per_device_sums(assignments, n_devices, per_fwd)
-        bwd = per_device_sums(assignments, n_devices, per_bwd)
+        # the additive fast path never touches counts -- don't pay the
+        # bincount unless a fusion model will rank-sort with it
+        counts = None \
+            if self.fusion_fwd.is_additive and self.fusion_bwd.is_additive \
+            else per_device_sums(assignments, n_devices)
+        fwd = self.fusion_fwd.device_ms(per_fwd, assignments, n_devices,
+                                        counts)
+        bwd = self.fusion_bwd.device_ms(per_bwd, assignments, n_devices,
+                                        counts)
         dim_sums = per_device_sums(assignments, n_devices, raw[:, F.DIM])
         payload_mb = (self.batch_size * dim_sums * self.spec.bytes_per_elem
                       * (n_devices - 1) / n_devices / 1e6)
@@ -437,10 +461,13 @@ class KernelOracle:
             batch = self.batch_size
             if table is None:
                 grid = self._calibration_grid()
+                # small fused sweep: enough to fit the launch-overhead
+                # amortization without stretching the lazy first call
                 table = CalibrationTable.measure(
                     **grid, use_pallas=self.use_pallas,
                     warmup=1, repeats=self.repeats, seed=self.seed,
-                    spec=self.spec, comm=CommModel.from_spec(self.spec))
+                    spec=self.spec, comm=CommModel.from_spec(self.spec),
+                    fused_ks=(2, 4), fused_per_k=3)
                 batch = grid["batches"][0]
             elif isinstance(table, (str, os.PathLike)):
                 table = CalibrationTable.load(os.fspath(table))

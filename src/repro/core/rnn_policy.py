@@ -11,7 +11,6 @@ exactly why it is sample-starved and unstable on harder tasks (Table 1).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -80,6 +80,12 @@ class DreamShard:
     auto-wrapped): the trainer only ever touches ``evaluate`` /
     ``mem_capacity_gb`` / ``num_evaluations``, so measured (KernelOracle)
     or memoized (CachedOracle) backends drop in without code changes.
+    When the backend is a v2-calibrated ``MeasuredOracle``, the batched
+    measured-collect path (``_measure_collected``) therefore trains the
+    cost network on fusion-aware per-device costs -- fused multi-table
+    ops priced through the artifact's ``FusionModel``, not the additive
+    per-table sum (the paper's cost network is likewise trained on
+    fused-op measurements).
     """
 
     def __init__(self, train_tasks: list[Task],

@@ -32,7 +32,6 @@ def _zipf_distribution(rng: np.random.Generator, hash_size: float,
     # each sampled rank bucket represents the ranks up to the next one
     widths = np.diff(np.concatenate([ranks, [n + 1]])).astype(np.float64)
     mass = weights * widths
-    probs = mass / mass.sum()
     total_draws = batch * pooling
     # expected #accesses of an index at each sampled rank:
     counts = total_draws * weights / mass.sum()

@@ -15,7 +15,6 @@ Inside the ``shard_map`` the lookup itself is the fused embedding-bag op
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +34,8 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **{_REP_KWARG: check_vma})
 
-from repro.embedding.plan import PlacementPlan
-from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.embedding.plan import PlacementPlan                # noqa: E402
+from repro.kernels.embedding_bag.ref import embedding_bag_ref  # noqa: E402
 
 
 def init_arenas(key, plan: PlacementPlan, dtype=jnp.float32,
@@ -107,7 +106,6 @@ def make_sharded_lookup(mesh, plan: PlacementPlan, *,
 
 def lookup_unsharded(arenas, bases, indices, plan: PlacementPlan):
     """Single-device oracle with identical semantics (tests/CPU examples)."""
-    B = indices.shape[0]
     outs = []
     for s in range(plan.n_shards):
         idx = indices[:, s * plan.k_max:(s + 1) * plan.k_max]

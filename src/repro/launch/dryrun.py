@@ -21,19 +21,19 @@ Usage:
       --shape train_4k --mesh single                           # one combo
 """
 
-import argparse
-import dataclasses
-import json
-import time
-import traceback
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
-from repro import configs as C
-from repro.configs.shapes import INPUT_SHAPES
-from repro.launch import roofline as R
-from repro.launch.mesh import make_production_mesh, production_rules
-from repro.launch import steps as ST
+from repro import configs as C  # noqa: E402
+from repro.configs.shapes import INPUT_SHAPES  # noqa: E402
+from repro.launch import roofline as R  # noqa: E402
+from repro.launch.mesh import make_production_mesh, production_rules  # noqa: E402
+from repro.launch import steps as ST  # noqa: E402
 
 TP = 16
 # decode cache capacity for sliding-window archs on the 500k shape
@@ -135,14 +135,16 @@ def _lower_dlrm(mesh, rules, batch=65536, n_tables=160, pool_slots=16):
               "top": [{"w": P(None, None), "b": P(None)}
                       for _ in aparams["top"]]}
     e_specs = OptState(P(), {"arenas": P(m, None)})   # rowwise acc (S, R)
-    d_specs = jax.tree.map(lambda l: P() if getattr(l, "ndim", 0) == 0
-                           else P(None, None) if l.ndim == 2 else P(None),
+    d_specs = jax.tree.map(lambda x: P() if getattr(x, "ndim", 0) == 0
+                           else P(None, None) if x.ndim == 2 else P(None),
                            a_dense)
     bspec = {"dense": rules.spec("batch", None),
              "gidx": rules.spec("batch", None, None),
              "labels": rules.spec("batch")}
-    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                is_leaf=lambda s: isinstance(s, P))
+    def ns(t):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                            is_leaf=lambda s: isinstance(s, P))
+
     in_sh = (ns(pspecs), ns(e_specs), ns(d_specs), ns(bspec))
     out_sh = (ns(pspecs), ns(e_specs), ns(d_specs),
               NamedSharding(mesh, P()))

@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -18,7 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.shapes import InputShape, input_specs
 from repro.models.config import ArchConfig
 from repro.models.sharding import NO_SHARDING, ShardingRules
-from repro.models.transformer import LM, lm_loss
+from repro.models.transformer import LM
 from repro.optim import adamw, apply_updates
 
 
@@ -69,11 +69,11 @@ def make_train_step(model: LM, lr: float = 3e-4, weight_decay: float = 0.1,
 
             def acc(carry, b):
                 g_acc, l_acc, a_acc = carry
-                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (loss_b, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, b)
                 g_acc = jax.tree.map(
                     lambda ga, gi: ga + gi.astype(ga.dtype), g_acc, g)
-                return (g_acc, l_acc + l, a_acc + a), None
+                return (g_acc, l_acc + loss_b, a_acc + a), None
 
             # f32 accumulator for <=4 microbatches; bf16 beyond (the f32
             # param-scale buffer dominates temp memory at high counts)

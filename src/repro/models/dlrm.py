@@ -42,8 +42,8 @@ def _mlp_init(key, sizes, dtype):
 
 
 def _mlp(params, x):
-    for i, l in enumerate(params):
-        x = x @ l["w"] + l["b"]
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
         if i < len(params) - 1:
             x = jax.nn.relu(x)
     return x

@@ -86,7 +86,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
         @jax.checkpoint
         def kv_step(carry, kv_xs):
-            m, l, acc = carry
+            m, denom, acc = carry
             ki, kblk, vblk = kv_xs
             k_pos = ki * kc + jnp.arange(kc)
             s = jnp.einsum("bqhd,bkhd->bhqk", qblk.astype(jnp.float32),
@@ -100,17 +100,17 @@ def flash_attention(q, k, v, *, causal: bool = True,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
+            denom = denom * corr + p.sum(axis=-1)
             pv = jnp.einsum("bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
             acc = acc * corr[..., None] + pv
-            return (m_new, l, acc), None
+            return (m_new, denom, acc), None
 
         init = (jnp.full((B, H, qc), NEG_INF, jnp.float32),
                 jnp.zeros((B, H, qc), jnp.float32),
                 jnp.zeros((B, H, qc, hd), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(
+        (m, denom, acc), _ = jax.lax.scan(
             kv_step, init, (jnp.arange(nk), kb, vb))
-        out = acc / jnp.maximum(l, 1e-20)[..., None]            # (B,H,qc,hd)
+        out = acc / jnp.maximum(denom, 1e-20)[..., None]        # (B,H,qc,hd)
         return None, jnp.moveaxis(out, 2, 1)                    # (B,qc,H,hd)
 
     _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 # ---- selective SSM (Mamba-style) ----------------------------------------------
@@ -20,7 +19,9 @@ def ssm_init(key, d_model: int, state_dim: int, expand: int, conv_width: int,
              dtype=jnp.bfloat16):
     di = expand * d_model
     ks = jax.random.split(key, 6)
-    init = lambda k, shape, scale: (jax.random.normal(k, shape) * scale).astype(dtype)
+    def init(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
     return {
         "in_proj": init(ks[0], (d_model, 2 * di), 0.02),
         "conv": init(ks[1], (conv_width, di), 0.2),
@@ -89,7 +90,9 @@ RWKV_HEAD_DIM = 64
 def rwkv_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
     H = d_model // RWKV_HEAD_DIM
     ks = jax.random.split(key, 10)
-    init = lambda k, shape, scale=0.02: (jax.random.normal(k, shape) * scale).astype(dtype)
+    def init(k, shape, scale=0.02):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
     return {
         "att": {
             "mu": init(ks[0], (5, d_model), 0.5),       # token-shift mixes r,k,v,w,g

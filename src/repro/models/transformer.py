@@ -18,8 +18,6 @@ Three entry points (built into jitted steps by ``repro.launch.steps``):
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -225,8 +223,10 @@ class LM:
         k = L.apply_rope(k, positions, cfg.rope_theta)
         q = rules.constrain(q, "batch", None, "model", None)
 
-        pin = (lambda t: self.rules.constrain(t, None, "batch", None,
-                                              "model", None))
+        def pin(t):
+            return self.rules.constrain(t, None, "batch", None,
+                                        "model", None)
+
         new_cache = None
         if cache is None:                               # train/eval, no cache
             ke, ve = self._expand_all_kv(k), self._expand_all_kv(v)

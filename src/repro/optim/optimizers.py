@@ -60,7 +60,8 @@ def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
 def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
     def init(params):
-        zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+        def zeros():
+            return jax.tree.map(jnp.zeros_like, params)
         return OptState(jnp.zeros((), jnp.int32), (zeros(), zeros()))
 
     def update(grads, state, params=None):

@@ -41,6 +41,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--rows", type=_ints, default=None)
     ap.add_argument("--batches", type=_ints, default=None)
     ap.add_argument("--poolings", type=_ints, default=None)
+    ap.add_argument("--fused-ks", type=_ints, default=None,
+                    help="fusion depths for the fused multi-table sweep "
+                         "(default 2,4,8; 2,4 in --smoke)")
+    ap.add_argument("--fused-per-k", type=int, default=None,
+                    help="heterogeneous draws per fusion depth "
+                         "(default 4; 3 in --smoke)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the fused sweep (additive fusion model, "
+                         "like a v1 artifact)")
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timing repeats per shape (default 5; 2 in --smoke)")
@@ -60,7 +69,7 @@ def _resolve_grid(args) -> dict:
             for k in ("dims", "rows", "batches", "poolings")}
 
 
-def _up_to_date(path: str, grid: dict) -> bool:
+def _up_to_date(path: str, grid: dict, fused_cfg: tuple | None) -> bool:
     from repro.profiling.calibration import (CALIBRATION_VERSION,
                                              hardware_fingerprint,
                                              load_or_none)
@@ -69,6 +78,15 @@ def _up_to_date(path: str, grid: dict) -> bool:
         return False
     if table.fingerprint != hardware_fingerprint():
         return False
+    if fused_cfg is not None:
+        # a fused run must find ITS fused sweep in the artifact --
+        # re-running with different ks/per-k (or after --no-fused) is a
+        # re-measure, not a silent no-op.  --no-fused against a fused
+        # artifact stays a no-op: the artifact is a superset.
+        ks, per_k = fused_cfg
+        if table.meta.get("fused_ks") != [int(k) for k in ks] \
+                or table.meta.get("fused_per_k") != int(per_k):
+            return False
     return all(np.array_equal(getattr(table, k),
                               np.asarray(grid[k], np.float64))
                for k in ("dims", "rows", "batches", "poolings"))
@@ -76,7 +94,11 @@ def _up_to_date(path: str, grid: dict) -> bool:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
-    from repro.profiling.calibration import CalibrationTable
+    from repro.profiling.calibration import (CALIBRATION_VERSION,
+                                             CalibrationTable,
+                                             DEFAULT_FUSED_KS,
+                                             DEFAULT_FUSED_PER_K,
+                                             load_or_none)
     from repro.profiling.microbench import default_use_pallas
     grid = _resolve_grid(args)
     say = (lambda *a: None) if args.quiet else \
@@ -93,28 +115,53 @@ def main(argv=None) -> int:
         grid["dims"] = tuple(sorted({pad_dim(int(d))
                                      for d in grid["dims"]}))
 
-    if not args.force and _up_to_date(args.out, grid):
+    fused_ks = args.fused_ks or ((2, 4) if args.smoke else DEFAULT_FUSED_KS)
+    fused_per_k = args.fused_per_k or (3 if args.smoke
+                                       else DEFAULT_FUSED_PER_K)
+    fused_cfg = None if args.no_fused else (fused_ks, fused_per_k)
+
+    import warnings
+    with warnings.catch_warnings():     # a stale v1 artifact warns on load;
+        warnings.simplefilter("ignore")  # we print our own message below
+        up_to_date = _up_to_date(args.out, grid, fused_cfg)
+        stale = None if up_to_date else load_or_none(args.out)
+    if not args.force and up_to_date:
         say(f"[calibrate] {args.out} is up to date "
             "(version/fingerprint/grid match); use --force to re-measure")
         return 0
+    if stale is not None and stale.version < CALIBRATION_VERSION:
+        say(f"[calibrate] {args.out} is schema v{stale.version} "
+            f"(< v{CALIBRATION_VERSION}: no fused multi-table sweep) -- "
+            "re-measuring")
 
     repeats = args.repeats if args.repeats is not None \
         else (2 if args.smoke else 5)
     n_shapes = int(np.prod([len(v) for v in grid.values()]))
     say(f"[calibrate] sweeping {n_shapes} kernel shapes "
         f"(repeats={repeats}, pallas={args.pallas}) ...")
+
+    def _progress(pt):
+        if hasattr(pt, "dims"):                       # FusedBenchPoint
+            print(f"  fused k={pt.k} dims={list(pt.dims)} "
+                  f"rows={list(pt.rows)} pools={list(pt.poolings)} "
+                  f"fwd={pt.fwd_ms:.4f}ms bwd={pt.bwd_ms:.4f}ms", flush=True)
+        else:
+            print(f"  dim={pt.dim:<4d} rows={pt.rows:<7d} "
+                  f"batch={pt.batch:<6d} pool={pt.pooling:<3d} "
+                  f"fwd={pt.fwd_ms:.4f}ms bwd={pt.bwd_ms:.4f}ms", flush=True)
+
     t0 = time.perf_counter()
     table = CalibrationTable.measure(
         **grid, use_pallas=use_pallas, warmup=args.warmup, repeats=repeats,
-        seed=args.seed,
-        progress=None if args.quiet else
-        (lambda pt: print(f"  dim={pt.dim:<4d} rows={pt.rows:<7d} "
-                          f"batch={pt.batch:<6d} pool={pt.pooling:<3d} "
-                          f"fwd={pt.fwd_ms:.4f}ms bwd={pt.bwd_ms:.4f}ms",
-                          flush=True)),
+        seed=args.seed, fused=not args.no_fused, fused_ks=fused_ks,
+        fused_per_k=fused_per_k,
+        progress=None if args.quiet else _progress,
         meta={"cli": True, "smoke": bool(args.smoke)})
     path = table.save(args.out)
     say(f"[calibrate] {table.summary()}")
+    if not args.no_fused:
+        say(f"[calibrate] fusion fwd {table.fusion_fwd.summary()}")
+        say(f"[calibrate] fusion bwd {table.fusion_bwd.summary()}")
     say(f"[calibrate] wrote {path} in {time.perf_counter() - t0:.1f}s")
     return 0
 

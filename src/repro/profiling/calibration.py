@@ -3,12 +3,24 @@
 A ``CalibrationTable`` holds the micro-benchmark grids from
 ``repro.profiling.microbench`` (per-shape forward/backward kernel
 milliseconds over ``(dim, rows, batch, pooling)``), the fitted
-``CommModel`` from ``repro.profiling.collectives``, a hardware
-fingerprint, and a format version.  It persists as a single ``.npz``
-(arrays raw, scalar metadata JSON-encoded) and answers interpolation
-queries: per-table costs are *multilinear in log2-space* over the grid,
-clamped to the grid's convex hull (out-of-range queries snap to the
-nearest edge -- calibrate a wider grid if that matters).
+``CommModel`` from ``repro.profiling.collectives``, the fitted
+``FusionModel`` pair from the fused multi-table sweep (format v2), a
+hardware fingerprint, and a format version.  It persists as a single
+``.npz`` (arrays raw, scalar metadata JSON-encoded) and answers
+interpolation queries: per-table costs are *multilinear in log2-space*
+over the grid, clamped to the grid's convex hull (out-of-range queries
+snap to the nearest edge -- calibrate a wider grid if that matters).
+
+The cost of a *fused* multi-table op is not the sum of its per-table
+costs (the paper's core measurement insight, Fig 12): one launch is
+paid instead of K, and co-scheduled tables pipeline.  A ``FusionModel``
+captures that deviation parametrically -- a fitted per-launch overhead
+``c0`` plus a per-rank pipelining efficiency ``eff(r) = min(cap,
+1 + coef * log2(r))`` -- so measured oracles can price a device's K
+tables as ``c0 + sum_r max(t_(r) - c0, 0) / eff(r)`` (tables ranked by
+descending single-table time) instead of ``sum_i t_i``.  v1 artifacts
+(no fused sweep) still load and fall back to the additive model with a
+warning.
 
 ``CalibrationTable.synthetic`` builds a deterministic table from the
 analytic ``CostSimulator`` instead of measuring -- the bridge used by
@@ -22,13 +34,18 @@ import dataclasses
 import itertools
 import json
 import os
+import warnings
 
 import numpy as np
 
 from repro.profiling.collectives import CommModel, calibrate_comm
 from repro.sim.hardware import HardwareSpec, PAPER_GPU
 
-CALIBRATION_VERSION = 1
+CALIBRATION_VERSION = 2
+
+# fused-sweep defaults: fusion depths K and heterogeneous draws per K
+DEFAULT_FUSED_KS = (2, 4, 8)
+DEFAULT_FUSED_PER_K = 4
 
 # tiny CI-friendly grid (--smoke); dims stay unpadded so CPU reference
 # timings actually differ per point (the Pallas path pads to 128 lanes)
@@ -84,6 +101,185 @@ def _axis_weights(grid: np.ndarray, x: np.ndarray):
     return lo, lo + 1, pos - lo
 
 
+@dataclasses.dataclass(frozen=True)
+class FusionModel:
+    """Parametric fused multi-table cost model for one kernel direction.
+
+    Prices one fused op over K tables whose *single-table* calibrated
+    times are ``t_1..t_K``:
+
+        fused = c0 + sum_r max(t_(r) - c0, 0) / eff(r)
+        eff(r) = min(cap, 1 + coef * log2(r))      (ranks sorted by
+                                                    descending time)
+
+    ``c0`` (``overhead_ms``) is the per-launch overhead every
+    single-table measurement pays but a fused op amortizes across its K
+    tables; ``eff`` is the pipelining discount deeper fusion earns.
+    The model is a function of K and total work only -- by construction
+    it is monotone in both (adding a table or growing any table's time
+    never lowers the fused cost; see ``tests/test_fusion_properties``),
+    it reduces to the exact single-table grid value at K = 1, and with
+    ``overhead_ms == pipeline_coef == 0`` it IS the additive model
+    (``is_additive``), which per-device pricing then computes via the
+    plain table-order segment sum -- bitwise what pre-v2 oracles did.
+    """
+
+    overhead_ms: float       # c0: fitted per-launch overhead
+    pipeline_coef: float     # eff(r) = min(cap, 1 + coef * log2(r))
+    pipeline_cap: float      # >= 1
+    source: str = "additive"           # "measured"|"synthetic"|"additive"
+    n_samples: int = 0                 # fused sweep points behind the fit
+    fit_mape: float = 0.0              # model MAPE on the sweep
+    additive_mape: float = 0.0         # additive-baseline MAPE on the sweep
+
+    def __post_init__(self):
+        if self.overhead_ms < 0 or self.pipeline_coef < 0 \
+                or self.pipeline_cap < 1.0:
+            raise ValueError(
+                f"need overhead_ms >= 0, pipeline_coef >= 0, "
+                f"pipeline_cap >= 1, got {self}")
+
+    @property
+    def is_additive(self) -> bool:
+        """True when the model degenerates to the plain per-table sum."""
+        return self.overhead_ms == 0.0 and self.pipeline_coef == 0.0
+
+    @classmethod
+    def additive(cls, source: str = "additive") -> "FusionModel":
+        """The identity correction: fused cost == sum of per-table costs
+        (the only model a v1 artifact can support)."""
+        return cls(overhead_ms=0.0, pipeline_coef=0.0, pipeline_cap=1.0,
+                   source=source)
+
+    def eff(self, ranks) -> np.ndarray:
+        """Per-rank pipelining efficiency (rank 1 is always 1.0)."""
+        r = np.maximum(np.asarray(ranks, dtype=np.float64), 1.0)
+        return np.minimum(self.pipeline_cap,
+                          1.0 + self.pipeline_coef * np.log2(r))
+
+    def fused_ms(self, per_table_ms) -> float:
+        """Fused-op time for one group of tables given their single-table
+        calibrated times.  K = 0 costs nothing, K = 1 returns the
+        single-table value bitwise (no correction to round-trip)."""
+        t = np.atleast_1d(np.asarray(per_table_ms, dtype=np.float64))
+        if t.size == 0:
+            return 0.0
+        if t.size == 1 or self.is_additive:
+            return float(t.sum())
+        m = np.sort(np.maximum(t - self.overhead_ms, 0.0))[::-1]
+        ranks = np.arange(1, t.size + 1)
+        return float(self.overhead_ms + (m / self.eff(ranks)).sum())
+
+    def device_ms(self, per_table_ms: np.ndarray, assignments: np.ndarray,
+                  n_devices: int, counts: np.ndarray | None = None
+                  ) -> np.ndarray:
+        """Per-(placement, device) fused compute time ``(P, D)`` over a
+        ``(P, M)`` assignment batch -- the batched form of ``fused_ms``.
+
+        Within every (placement, device) group tables are ranked by
+        descending single-table time (ties broken by table index, fixed
+        across batch compositions) and discounted by ``eff(rank)``; each
+        row is independent of the others, so ``evaluate`` stays the
+        P = 1 special case of ``evaluate_many`` bitwise.  Cells with one
+        table take the plain segment sum (the exact grid value), and an
+        additive model takes it for every cell -- table-order summation,
+        bitwise identical to the pre-v2 oracle arithmetic.
+        """
+        from repro.sim.costsim import per_device_sums
+        per = np.asarray(per_table_ms, dtype=np.float64)
+        P, M = assignments.shape
+        sums = per_device_sums(assignments, n_devices, per)
+        if self.is_additive:
+            return sums                  # never needs the counts bincount
+        if counts is None:
+            counts = per_device_sums(assignments, n_devices)
+        rows = np.arange(P)[:, None]
+        starts = np.concatenate(
+            [np.zeros((P, 1), np.int64),
+             np.cumsum(counts, axis=1)[:, :-1]], axis=1)
+        m = np.broadcast_to(np.maximum(per - self.overhead_ms, 0.0), (P, M))
+        order = np.lexsort((-m, assignments), axis=-1)
+        dev_sorted = assignments[rows, order]
+        rank = np.arange(M)[None, :] - starts[rows, dev_sorted]
+        contrib = m[rows, order] / self.eff(rank + 1)
+        fused = (per_device_sums(dev_sorted, n_devices, contrib)
+                 + self.overhead_ms)
+        return np.where(counts > 1, fused, sums)
+
+    @classmethod
+    def fit(cls, singles: list, fused_ms: np.ndarray, *,
+            source: str = "measured") -> "FusionModel":
+        """Fit ``(c0, coef, cap)`` to a fused sweep.
+
+        ``singles[k]`` holds sample k's per-table single-table times (as
+        interpolated from the just-measured grid), ``fused_ms[k]`` the
+        measured fused-op time.  For a fixed ``(coef, cap)`` the
+        prediction is linear in ``c0`` (``c0 * (1 - sum_r 1/eff(r)) +
+        sum_r t_(r)/eff(r)``), so ``c0`` has a closed-form relative
+        least-squares solution and only ``(coef, cap)`` are grid
+        searched -- deterministic, dependency-free, and a few thousand
+        dot products.  ``c0`` is clamped to the smallest single-table
+        time seen so fitted marginals stay non-negative.
+        """
+        y = np.asarray(fused_ms, dtype=np.float64)
+        ts = [np.sort(np.asarray(t, np.float64))[::-1] for t in singles]
+        if y.size == 0 or y.size != len(ts):
+            raise ValueError("need one fused measurement per sample")
+        c0_max = min(float(t.min()) for t in ts)
+        additive = np.array([t.sum() for t in ts])
+        additive_mape = float(np.mean(np.abs(additive - y) / y))
+        best = None
+        # bounded search: deep-fusion discounts beyond ~6x are not
+        # physical for these kernels, and a wider box just lets timing
+        # outliers pick absurd pipelining factors
+        coefs = np.concatenate([[0.0], np.geomspace(0.02, 3.0, 24)])
+        caps = (1.0, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0)
+        for coef in coefs:
+            for cap in caps:
+                if coef == 0.0 and cap != 1.0:
+                    continue                  # eff is flat: caps all alias
+                probe = cls(overhead_ms=0.0, pipeline_coef=float(coef),
+                            pipeline_cap=float(cap), source=source)
+                w = [1.0 / probe.eff(np.arange(1, t.size + 1)) for t in ts]
+                a = np.array([1.0 - wk.sum() for wk in w])
+                b = np.array([(wk * t).sum() for wk, t in zip(w, ts)])
+                denom = ((a / y) ** 2).sum()
+                c0 = 0.0 if denom <= 0 else \
+                    float((a * (y - b) / y ** 2).sum() / denom)
+                c0 = min(max(c0, 0.0), c0_max)
+                pred = a * c0 + b
+                mape = float(np.mean(np.abs(pred - y) / y))
+                if best is None or mape < best[0]:
+                    best = (mape, c0, float(coef), float(cap))
+        mape, c0, coef, cap = best
+        return cls(overhead_ms=c0, pipeline_coef=coef, pipeline_cap=cap,
+                   source=source, n_samples=int(y.size),
+                   fit_mape=round(mape, 6),
+                   additive_mape=round(additive_mape, 6))
+
+    @classmethod
+    def from_spec(cls, spec: HardwareSpec = PAPER_GPU) -> "FusionModel":
+        """Analytic model mirroring the simulator's fused-op pricing
+        (same ``c0``/pipeline constants, no measurement)."""
+        return cls(overhead_ms=spec.comp_overhead_ms,
+                   pipeline_coef=spec.pipeline_coef,
+                   pipeline_cap=spec.pipeline_cap, source="synthetic")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FusionModel":
+        return cls(**d)
+
+    def summary(self) -> str:
+        return (f"{self.source}: c0={self.overhead_ms:.4f}ms "
+                f"eff=min({self.pipeline_cap:g}, "
+                f"1+{self.pipeline_coef:g}*log2(r)) "
+                f"[{self.n_samples} pts, mape {self.fit_mape:.3f} "
+                f"vs additive {self.additive_mape:.3f}]")
+
+
 @dataclasses.dataclass
 class CalibrationTable:
     """Measured (or synthetic) kernel/collective cost grids + provenance."""
@@ -98,8 +294,17 @@ class CalibrationTable:
     fingerprint: dict
     version: int = CALIBRATION_VERSION
     meta: dict = dataclasses.field(default_factory=dict)
+    # v2: fused multi-table correction (None -> additive fallback) and the
+    # fused-sweep trace behind the fit (k, additive-vs-measured ms arrays)
+    fusion_fwd: FusionModel | None = None
+    fusion_bwd: FusionModel | None = None
+    fusion_sweep: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
+        if self.fusion_fwd is None:
+            self.fusion_fwd = FusionModel.additive()
+        if self.fusion_bwd is None:
+            self.fusion_bwd = FusionModel.additive()
         for name in ("dims", "rows", "batches", "poolings"):
             g = np.asarray(getattr(self, name), dtype=np.float64)
             if g.ndim != 1 or g.size == 0 or np.any(np.diff(g) <= 0) \
@@ -178,14 +383,18 @@ class CalibrationTable:
         scalar = {"comm": self.comm.to_dict(),
                   "fingerprint": self.fingerprint,
                   "version": self.version,
-                  "meta": self.meta}
+                  "meta": self.meta,
+                  "fusion": {"fwd": self.fusion_fwd.to_dict(),
+                             "bwd": self.fusion_bwd.to_dict()}}
+        sweep = {f"fusion_{k}": np.asarray(v, np.float64)
+                 for k, v in self.fusion_sweep.items()}
         # atomic: an interrupted calibration must not leave a truncated
         # artifact behind for the next loader
         tmp = path + ".tmp.npz"
         np.savez(tmp, dims=self.dims, rows=self.rows,
                  batches=self.batches, poolings=self.poolings,
                  fwd_ms=self.fwd_ms, bwd_ms=self.bwd_ms,
-                 scalar_json=np.array(json.dumps(scalar)))
+                 scalar_json=np.array(json.dumps(scalar)), **sweep)
         os.replace(tmp, path)
         return path
 
@@ -198,12 +407,30 @@ class CalibrationTable:
                     f"calibration artifact {path} has version "
                     f"{scalar['version']} > supported {CALIBRATION_VERSION};"
                     " upgrade the code or re-calibrate")
+            if "fusion" in scalar:
+                fusion_fwd = FusionModel.from_dict(scalar["fusion"]["fwd"])
+                fusion_bwd = FusionModel.from_dict(scalar["fusion"]["bwd"])
+            else:
+                # v1 artifact: no fused sweep was measured.  Load it --
+                # interpolation grids are still good -- but per-device
+                # pricing degrades to the additive per-table model.
+                warnings.warn(
+                    f"calibration artifact {path} is v{scalar['version']} "
+                    "(pre-fusion): falling back to the ADDITIVE multi-table "
+                    "model; re-run `python -m repro.profiling.calibrate` to "
+                    "measure the fused correction", stacklevel=2)
+                fusion_fwd = FusionModel.additive(source="v1-fallback")
+                fusion_bwd = FusionModel.additive(source="v1-fallback")
+            sweep = {k[len("fusion_"):]: z[k] for k in z.files
+                     if k.startswith("fusion_")}
             return cls(dims=z["dims"], rows=z["rows"], batches=z["batches"],
                        poolings=z["poolings"], fwd_ms=z["fwd_ms"],
                        bwd_ms=z["bwd_ms"],
                        comm=CommModel.from_dict(scalar["comm"]),
                        fingerprint=scalar["fingerprint"],
-                       version=scalar["version"], meta=scalar["meta"])
+                       version=scalar["version"], meta=scalar["meta"],
+                       fusion_fwd=fusion_fwd, fusion_bwd=fusion_bwd,
+                       fusion_sweep=sweep)
 
     # ---- construction ------------------------------------------------------
 
@@ -213,9 +440,12 @@ class CalibrationTable:
                 repeats: int = 5, seed: int = 0,
                 spec: HardwareSpec = PAPER_GPU,
                 comm: CommModel | None = None,
+                fused: bool = True, fused_ks=None, fused_per_k: int | None = None,
                 progress=None, meta: dict | None = None
                 ) -> "CalibrationTable":
-        """Run the full offline calibration: kernel sweep + comm fit."""
+        """Run the full offline calibration: kernel sweep + comm fit +
+        fused multi-table sweep (``fused=False`` skips the latter and
+        leaves the additive model, like a v1 artifact)."""
         from repro.profiling import microbench
         grid = {"dims": dims or DEFAULT_GRID["dims"],
                 "rows": rows or DEFAULT_GRID["rows"],
@@ -239,14 +469,61 @@ class CalibrationTable:
         if comm is None:
             comm = calibrate_comm(spec=spec, warmup=warmup,
                                   repeats=repeats, seed=seed)
-        return cls(dims=np.asarray(grid["dims"], np.float64),
-                   rows=np.asarray(grid["rows"], np.float64),
-                   batches=np.asarray(grid["batches"], np.float64),
-                   poolings=np.asarray(grid["poolings"], np.float64),
-                   fwd_ms=fwd, bwd_ms=bwd, comm=comm,
-                   fingerprint=hardware_fingerprint(),
-                   meta={"warmup": warmup, "repeats": repeats, "seed": seed,
-                         "use_pallas": bool(use_pallas), **(meta or {})})
+        table = cls(dims=np.asarray(grid["dims"], np.float64),
+                    rows=np.asarray(grid["rows"], np.float64),
+                    batches=np.asarray(grid["batches"], np.float64),
+                    poolings=np.asarray(grid["poolings"], np.float64),
+                    fwd_ms=fwd, bwd_ms=bwd, comm=comm,
+                    fingerprint=hardware_fingerprint(),
+                    meta={"warmup": warmup, "repeats": repeats, "seed": seed,
+                          "use_pallas": bool(use_pallas), **(meta or {})})
+        if fused:
+            table.calibrate_fusion(
+                ks=fused_ks or DEFAULT_FUSED_KS,
+                per_k=fused_per_k or DEFAULT_FUSED_PER_K,
+                use_pallas=use_pallas, warmup=warmup, repeats=repeats,
+                seed=seed, progress=progress)
+        return table
+
+    def calibrate_fusion(self, *, ks=DEFAULT_FUSED_KS,
+                         per_k: int = DEFAULT_FUSED_PER_K,
+                         use_pallas: bool | None = None, warmup: int = 1,
+                         repeats: int = 5, seed: int = 0, progress=None
+                         ) -> None:
+        """Measure the fused multi-table sweep over this table's grid and
+        fit the forward/backward ``FusionModel`` pair in place.
+
+        Each sweep point stacks K heterogeneous ``(dim, rows, pooling)``
+        draws (grid points, so the single-table baseline is
+        interpolation-exact) into ONE arena launch at the table's
+        largest calibrated batch; the fit explains the measured
+        deviation from the sum of the K single-table grid values.
+        """
+        from repro.profiling import microbench
+        batch = int(self.batches[-1])
+        points = microbench.sweep_fused(
+            self.dims, self.rows, self.poolings, batch, ks=ks,
+            per_k=per_k, use_pallas=use_pallas, warmup=warmup,
+            repeats=repeats, seed=seed, progress=progress)
+        singles_fwd, singles_bwd = [], []
+        for pt in points:
+            f, b = self.lookup_ms(np.asarray(pt.dims), np.asarray(pt.rows),
+                                  batch, np.asarray(pt.poolings))
+            singles_fwd.append(f)
+            singles_bwd.append(b)
+        meas_fwd = np.array([pt.fwd_ms for pt in points])
+        meas_bwd = np.array([pt.bwd_ms for pt in points])
+        self.fusion_fwd = FusionModel.fit(singles_fwd, meas_fwd)
+        self.fusion_bwd = FusionModel.fit(singles_bwd, meas_bwd)
+        self.fusion_sweep = {
+            "k": np.array([pt.k for pt in points], np.float64),
+            "fwd_additive_ms": np.array([f.sum() for f in singles_fwd]),
+            "fwd_ms": meas_fwd,
+            "bwd_additive_ms": np.array([b.sum() for b in singles_bwd]),
+            "bwd_ms": meas_bwd,
+        }
+        self.meta = {**self.meta, "fused_ks": [int(k) for k in ks],
+                     "fused_per_k": int(per_k), "fused_batch": batch}
 
     @classmethod
     def synthetic(cls, spec: HardwareSpec = PAPER_GPU, *, dims=None,
@@ -271,11 +548,11 @@ class CalibrationTable:
             sim = CostSimulator(spec, batch_size=int(b), noise_std=0.0)
             for i, d in enumerate(g["dims"]):
                 for j, r in enumerate(g["rows"]):
-                    for l, p in enumerate(g["poolings"]):
+                    for n, p in enumerate(g["poolings"]):
                         raw = F.pack_features([d], [r], [p], dist)
-                        fwd[i, j, k, l] = (spec.comp_overhead_ms
+                        fwd[i, j, k, n] = (spec.comp_overhead_ms
                                            + sim.marginal_fwd_ms(raw)[0])
-                        bwd[i, j, k, l] = (spec.comp_overhead_ms
+                        bwd[i, j, k, n] = (spec.comp_overhead_ms
                                            + sim.marginal_bwd_ms(raw)[0])
         return cls(dims=g["dims"], rows=g["rows"], batches=g["batches"],
                    poolings=g["poolings"], fwd_ms=fwd, bwd_ms=bwd,
@@ -283,7 +560,14 @@ class CalibrationTable:
                    fingerprint={"backend": "synthetic", "device_kind": spec.name,
                                 "n_devices": 0, "platform": "analytic",
                                 "machine": "analytic"},
-                   meta={"source": "costsim", "spec": spec.name})
+                   meta={"source": "costsim", "spec": spec.name},
+                   # the grid cells are the simulator's c0 + marginal, so
+                   # the spec's own pipeline constants ARE the matching
+                   # fused correction: pricing K co-resident tables
+                   # through this model reproduces fused_op_ms modulo the
+                   # placement-dependent shared-cache term
+                   fusion_fwd=FusionModel.from_spec(spec),
+                   fusion_bwd=FusionModel.from_spec(spec))
 
     def summary(self) -> str:
         n_pts = self.fwd_ms.size
@@ -294,6 +578,9 @@ class CalibrationTable:
                 f"poolings {self.poolings.astype(int).tolist()}), "
                 f"comm {self.comm.source} alpha={self.comm.alpha_ms:.4f}ms "
                 f"beta={self.comm.beta_ms_per_mb:.4f}ms/MB, "
+                f"fusion fwd {self.fusion_fwd.source}"
+                f" c0={self.fusion_fwd.overhead_ms:.4f}ms"
+                f"/bwd c0={self.fusion_bwd.overhead_ms:.4f}ms, "
                 f"hw={self.fingerprint.get('backend')}/"
                 f"{self.fingerprint.get('device_kind')}")
 

@@ -117,20 +117,140 @@ def sweep(dims, rows, batches, poolings, *, use_pallas: bool | None = None,
     for i, d in enumerate(dims):
         for j, r in enumerate(rows):
             for k, b in enumerate(batches):
-                for l, p in enumerate(poolings):
+                for n, p in enumerate(poolings):
                     pt = bench_shape(int(d), int(r), int(b), int(p),
                                      use_pallas=use_pallas, warmup=warmup,
                                      repeats=repeats, seed=seed)
-                    fwd[i, j, k, l] = pt.fwd_ms
-                    bwd[i, j, k, l] = pt.bwd_ms
+                    fwd[i, j, k, n] = pt.fwd_ms
+                    bwd[i, j, k, n] = pt.bwd_ms
                     if progress is not None:
                         progress(pt)
     return fwd, bwd
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedBenchPoint:
+    """One measured fused multi-table op (times in milliseconds)."""
+
+    dims: tuple
+    rows: tuple
+    poolings: tuple
+    batch: int
+    fwd_ms: float
+    bwd_ms: float
+
+    @property
+    def k(self) -> int:
+        return len(self.dims)
+
+
+def fused_arena_dim(dims) -> int:
+    """Arena width of a fused op over heterogeneous tables: the widest
+    table, padded to 128 lanes -- the same convention the live
+    ``measure_placement`` harness (and the Pallas kernel) uses, so fused
+    sweep measurements and live placements price the same op."""
+    return max(128, int(np.ceil(max(dims) / 128) * 128))
+
+
+def make_fused_inputs(dims, rows, batch: int, poolings, seed: int = 0):
+    """(arena, indices, grad_out) for ONE fused op over K stacked tables.
+
+    Tables live back to back in a shared arena (row 0 = zero row) at
+    ``fused_arena_dim`` width; each table contributes ``batch`` zipf-ish
+    lookups at its own pooling factor, padded to the widest pooling with
+    the zero row (exact for sum pooling, and part of what the real fused
+    op pays).
+    """
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    rows = np.asarray(rows, dtype=np.int64)
+    dim = fused_arena_dim(dims)
+    bases = np.concatenate([[1], 1 + np.cumsum(rows)[:-1]])
+    arena = jnp.zeros((1 + int(rows.sum()), dim), jnp.float32)
+    p_max = int(max(poolings))
+    idx = np.zeros((batch * len(rows), p_max), np.int32)
+    for k, (b, r, p) in enumerate(zip(bases, rows, poolings)):
+        draws = rng.zipf(1.5, size=(batch, int(p)))
+        idx[k * batch:(k + 1) * batch, :int(p)] = b + draws % r
+    g = jnp.ones((idx.shape[0], dim), jnp.float32)
+    return arena, jnp.asarray(idx), g
+
+
+def bench_fused_shape(dims, rows, batch: int, poolings, *,
+                      use_pallas: bool | None = None, warmup: int = 1,
+                      repeats: int = 5, seed: int = 0) -> FusedBenchPoint:
+    """Time ONE fused forward + backward op over K heterogeneous tables.
+
+    This is the measurement the additive per-table model cannot predict:
+    one launch instead of K, co-scheduled gathers, one shared arena.
+    ``repro.profiling.calibration`` fits the deviation from the
+    single-table grid into a ``FusionModel``.
+    """
+    import jax
+    from repro.kernels.embedding_bag.ref import (embedding_bag_grad_ref,
+                                                 embedding_bag_ref)
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        from repro.kernels.embedding_bag.ops import embedding_bag
+        fwd_fn = jax.jit(embedding_bag)
+    else:
+        fwd_fn = jax.jit(embedding_bag_ref)
+    bwd_fn = jax.jit(embedding_bag_grad_ref, static_argnums=0)
+
+    arena, idx, g = make_fused_inputs(dims, rows, batch, poolings, seed=seed)
+    fwd_ms = median_time_ms(fwd_fn, (arena, idx),
+                            warmup=warmup, repeats=repeats)
+    bwd_ms = median_time_ms(bwd_fn, (arena.shape, idx, g),
+                            warmup=warmup, repeats=repeats)
+    return FusedBenchPoint(dims=tuple(int(d) for d in dims),
+                           rows=tuple(int(r) for r in rows),
+                           poolings=tuple(int(p) for p in poolings),
+                           batch=int(batch), fwd_ms=fwd_ms, bwd_ms=bwd_ms)
+
+
+def sweep_fused(dims, rows, poolings, batch: int, *, ks=(2, 4, 8),
+                per_k: int = 4, use_pallas: bool | None = None,
+                warmup: int = 1, repeats: int = 5, seed: int = 0,
+                progress=None) -> list[FusedBenchPoint]:
+    """Fused multi-table sweep: for each fusion depth K, measure
+    ``per_k`` ops over heterogeneous ``(rows, pooling)`` draws from the
+    given grid axes (with replacement, seeded).  Draws land exactly on
+    grid points so the single-table baseline each op is compared to is
+    interpolation-exact.
+
+    Each op's K tables share ONE dim (drawn per op): the fused arena
+    runs every table at the group's widest padded dim, so a mixed-dim
+    group would fold arena-padding inflation -- a table-mix effect the
+    K/total-work ``FusionModel`` deliberately does not see, and one that
+    can push measured-fused above the additive baseline -- into the fit
+    that prices every placement.  Real embedding pools are
+    dim-homogeneous per fused op anyway (the DLRM suites are single-dim
+    pools).
+    """
+    rng = np.random.default_rng(seed)
+    dims = np.asarray(dims)
+    rows = np.asarray(rows)
+    poolings = np.asarray(poolings)
+    points = []
+    for k in ks:
+        for _ in range(per_k):
+            dim = dims[rng.integers(0, dims.size)]
+            pt = bench_fused_shape(
+                np.full(k, dim),
+                rows[rng.integers(0, rows.size, size=k)],
+                batch, poolings[rng.integers(0, poolings.size, size=k)],
+                use_pallas=use_pallas, warmup=warmup, repeats=repeats,
+                seed=int(rng.integers(0, 2**31)))
+            points.append(pt)
+            if progress is not None:
+                progress(pt)
+    return points
+
+
 def measure_placement(raw: np.ndarray, assignment: np.ndarray,
                       n_devices: int, *, spec: HardwareSpec = PAPER_GPU,
-                      batch_size: int = 64, pooling: int = 4,
+                      batch_size: int = 64, pooling: int | None = 4,
                       max_rows: int = 4096, repeats: int = 2,
                       use_pallas: bool = False, seed: int = 0):
     """LIVE per-placement measurement: the old ``KernelOracle.evaluate``
@@ -140,14 +260,28 @@ def measure_placement(raw: np.ndarray, assignment: np.ndarray,
     forward + backward kernels for every device group -- slow and noisy
     by construction (this is exactly what the calibration subsystem
     replaces).  Communication reuses the simulator's analytic model.
+    ``pooling=None`` takes each table's own pooling factor from ``raw``
+    (blocks padded to the device's widest pooling with the zero row, as
+    in ``make_fused_inputs``); an int forces that factor everywhere (the
+    pre-fusion behaviour).  ``benchmarks/b8_fusion_model.py`` uses this
+    path as ground truth for the fused multi-table cost model.
     """
+    import jax
     import jax.numpy as jnp
     from repro.core import features as F
     from repro.kernels.embedding_bag.ref import (embedding_bag_grad_ref,
                                                  embedding_bag_ref)
     from repro.sim.costsim import CostSimulator, SimResult, placement_digest
+
+    # time the COMPILED ops (compile paid by the warmup call), matching
+    # the micro-benchmark sweep -- eager timing would fold per-op Python
+    # dispatch into the "hardware" cost no production path pays
     if use_pallas:
         from repro.kernels.embedding_bag.ops import embedding_bag
+        fwd_fn = jax.jit(embedding_bag)
+    else:
+        fwd_fn = jax.jit(embedding_bag_ref)
+    bwd_fn = jax.jit(embedding_bag_grad_ref, static_argnums=0)
 
     raw = np.asarray(raw, dtype=np.float64)
     assignment = np.asarray(assignment)
@@ -159,33 +293,38 @@ def measure_placement(raw: np.ndarray, assignment: np.ndarray,
     dim_sums = np.zeros(n_devices)
 
     def _time_ms(fn, *args) -> float:
+        # median-of-repeats, the same estimator the calibration sweep
+        # uses (min-of-k vs median-of-k differ by 2-3x under bursty host
+        # contention, which would bias every live-vs-interpolated
+        # comparison)
         fn(*args).block_until_ready()            # warmup / compile
-        best = float("inf")
+        times = []
         for _ in range(repeats):
             t0 = time.perf_counter()
             fn(*args).block_until_ready()
-            best = min(best, time.perf_counter() - t0)
-        return best * 1e3
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times)) * 1e3
 
     for d in range(n_devices):
         sub = raw[assignment == d]
         if sub.shape[0] == 0:
             continue
         rows = np.minimum(sub[:, F.HASH_SIZE].astype(np.int64), max_rows)
+        if pooling is None:
+            pools = np.maximum(1, np.rint(sub[:, F.POOLING]).astype(np.int64))
+        else:
+            pools = np.full(len(rows), int(pooling), np.int64)
         bases = np.concatenate([[1], 1 + np.cumsum(rows)[:-1]])
         arena = jnp.zeros((1 + int(rows.sum()), dim), jnp.float32)
-        idx = np.zeros((batch_size * len(rows), pooling), np.int32)
-        for k, (b, r) in enumerate(zip(bases, rows)):
-            draws = rng.zipf(1.5, size=(batch_size, pooling))
+        idx = np.zeros((batch_size * len(rows), int(pools.max())), np.int32)
+        for k, (b, r, p) in enumerate(zip(bases, rows, pools)):
+            draws = rng.zipf(1.5, size=(batch_size, int(p)))
             lo = k * batch_size
-            idx[lo:lo + batch_size] = b + draws % r
+            idx[lo:lo + batch_size, :int(p)] = b + draws % r
         idx = jnp.asarray(idx)
-        if use_pallas:
-            fwd[d] = _time_ms(embedding_bag, arena, idx)
-        else:
-            fwd[d] = _time_ms(embedding_bag_ref, arena, idx)
+        fwd[d] = _time_ms(fwd_fn, arena, idx)
         g = jnp.ones((idx.shape[0], dim), jnp.float32)
-        bwd[d] = _time_ms(embedding_bag_grad_ref, arena.shape, idx, g)
+        bwd[d] = _time_ms(bwd_fn, arena.shape, idx, g)
         dim_sums[d] = sub[:, F.DIM].sum()
 
     comm = CostSimulator(spec, noise_std=0.0).comm_ms(dim_sums, n_devices)

@@ -6,11 +6,11 @@ import sys
 # --xla_force_host_platform_device_count themselves.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-import pytest
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
-from repro.data.synthetic import make_dlrm_pool, make_prod_pool
-from repro.sim.costsim import CostSimulator
+from repro.data.synthetic import make_dlrm_pool, make_prod_pool  # noqa: E402
+from repro.sim.costsim import CostSimulator  # noqa: E402
 
 
 @pytest.fixture(scope="session")
@@ -31,3 +31,20 @@ def sim():
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def save_v1_calibration():
+    """Writer for the exact pre-fusion (v1) artifact format, shared by
+    the v1-fallback tests (test_profiling, test_fusion_properties)."""
+    import json
+
+    def _save(table, path):
+        scalar = {"comm": table.comm.to_dict(),
+                  "fingerprint": table.fingerprint,
+                  "version": 1, "meta": table.meta}
+        np.savez(path, dims=table.dims, rows=table.rows,
+                 batches=table.batches, poolings=table.poolings,
+                 fwd_ms=table.fwd_ms, bwd_ms=table.bwd_ms,
+                 scalar_json=np.array(json.dumps(scalar)))
+    return _save

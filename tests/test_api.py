@@ -10,7 +10,7 @@ from repro.api import (CachedOracle, CostOracle, DreamShardPlacer,
                        ensure_oracle, make_baseline_placers)
 from repro.core import baselines as B
 from repro.core.trainer import DreamShard, DreamShardConfig
-from repro.data.tasks import Task, sample_tasks, split_pool
+from repro.data.tasks import sample_tasks, split_pool
 from repro.embedding.plan import build_plan
 from repro.sim.costsim import CostSimulator, placement_digest
 

@@ -25,10 +25,10 @@ def _random_batch(rng, n_tables, n_devices, n_placements):
 
 def _assert_results_bitwise(batch, loop):
     assert len(batch) == len(loop)
-    for b, l in zip(batch, loop):
+    for b, ref in zip(batch, loop):
         for f in RESULT_FIELDS:
-            np.testing.assert_array_equal(getattr(b, f), getattr(l, f))
-        assert b.overall == l.overall
+            np.testing.assert_array_equal(getattr(b, f), getattr(ref, f))
+        assert b.overall == ref.overall
 
 
 # ---- CostSimulator core -------------------------------------------------------
@@ -122,6 +122,37 @@ def test_oracle_evaluate_many_bitwise(dlrm_pool, rng, name):
     loop_oracle = _oracles(dlrm_pool)[name]
     loop = [loop_oracle.evaluate(raw, a, 4) for a in A]
     _assert_results_bitwise(batch, loop)
+
+
+def test_measured_oracle_fusion_batch_bitwise(dlrm_pool, rng):
+    """The fused multi-table pricing (v2 calibration) keeps the batch
+    guarantee: evaluate_many == sequential evaluate loop bitwise, with
+    the fusion model demonstrably engaged (fused != additive)."""
+    table = CalibrationTable.synthetic()
+    assert not table.fusion_fwd.is_additive
+    raw = dlrm_pool[:14]
+    A = _random_batch(rng, 14, 4, 24)
+    batch = MeasuredOracle(table).evaluate_many(raw, A, 4)
+    loop_oracle = MeasuredOracle(table)
+    loop = [loop_oracle.evaluate(raw, a, 4) for a in A]
+    _assert_results_bitwise(batch, loop)
+    additive = MeasuredOracle(table, fusion=False).evaluate_many(raw, A, 4)
+    assert all(b.overall != a.overall for b, a in zip(batch, additive))
+    # the additive path holds the same batch==loop guarantee
+    add_loop_oracle = MeasuredOracle(table, fusion=False)
+    _assert_results_bitwise(additive,
+                            [add_loop_oracle.evaluate(raw, a, 4) for a in A])
+
+
+def test_measured_oracle_fusion_rows_independent(dlrm_pool, rng):
+    """Under the fusion model a row's rank sort happens within its own
+    groups only: results are independent of batch composition."""
+    table = CalibrationTable.synthetic()
+    raw = dlrm_pool[:12]
+    A = _random_batch(rng, 12, 3, 16)
+    full = MeasuredOracle(table).evaluate_many(raw, A, 3)
+    sub = MeasuredOracle(table).evaluate_many(raw, A[5:9], 3)
+    _assert_results_bitwise(sub, full[5:9])
 
 
 def test_cached_oracle_partial_hits(dlrm_pool, rng):

@@ -1,0 +1,107 @@
+"""The CI benchmark-regression gate: passes on matching runs, fails on a
+synthetic 30% slowdown, on eval-cost drift, on a violated fusion
+invariant, and on vacuously-empty comparisons."""
+
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks", "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+TRAIN = {
+    "benchmark": "b6_train_throughput",
+    "regimes": {"scale": {
+        "config": {"n_iterations": 10, "n_collect": 100, "n_cost": 300,
+                   "n_batch": 8, "n_rl": 10, "n_episode": 10},
+        "per_iteration_speedup": 5.0,
+        "seed": {"eval_cost_ms": 19.5128},
+        "fused": {"eval_cost_ms": 19.5128},
+    }},
+}
+ORACLE = {
+    "benchmark": "b7_oracle_throughput",
+    "regimes": {"scale": {
+        "n_placements": 2000,
+        "oracles": {"sim": {"speedup": 40.0},
+                    "measured": {"speedup": 200.0}},
+    }},
+}
+FUSION = {
+    "benchmark": "b8_fusion_model",
+    "mode": "full",
+    "accuracy": {"mape_fusion_aware": 0.27, "mape_additive": 1.04},
+    "determinism": {"mean_overall_fused": 1.5290863313,
+                    "mean_overall_additive": 3.1231791824},
+}
+
+
+def _gate(tmp_path, baseline, fresh, extra=()):
+    b = tmp_path / "baseline.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    return check_bench.main(["--pair", str(b), str(f), *extra])
+
+
+@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION])
+def test_identical_runs_pass(tmp_path, doc):
+    assert _gate(tmp_path, doc, copy.deepcopy(doc)) == 0
+
+
+def test_thirty_percent_slowdown_fails(tmp_path):
+    """The acceptance scenario: a synthetic 30% throughput regression
+    trips the 25% gate."""
+    fresh = copy.deepcopy(TRAIN)
+    fresh["regimes"]["scale"]["per_iteration_speedup"] = 5.0 * 0.7
+    assert _gate(tmp_path, TRAIN, fresh) == 1
+    fresh = copy.deepcopy(ORACLE)
+    fresh["regimes"]["scale"]["oracles"]["sim"]["speedup"] = 40.0 * 0.7
+    assert _gate(tmp_path, ORACLE, fresh) == 1
+
+
+def test_small_wobble_passes(tmp_path):
+    fresh = copy.deepcopy(TRAIN)
+    fresh["regimes"]["scale"]["per_iteration_speedup"] = 5.0 * 0.85
+    assert _gate(tmp_path, TRAIN, fresh) == 0
+
+
+def test_eval_cost_drift_fails(tmp_path):
+    fresh = copy.deepcopy(TRAIN)
+    fresh["regimes"]["scale"]["fused"]["eval_cost_ms"] = 19.8
+    assert _gate(tmp_path, TRAIN, fresh) == 1
+    # a looser leg-specific rtol admits the same drift
+    assert _gate(tmp_path, TRAIN, fresh, extra=("--eval-rtol", "0.05")) == 0
+
+
+def test_determinism_drift_fails(tmp_path):
+    fresh = copy.deepcopy(FUSION)
+    fresh["determinism"]["mean_overall_fused"] = 1.531
+    assert _gate(tmp_path, FUSION, fresh) == 1
+
+
+def test_fusion_invariant_violation_fails(tmp_path):
+    fresh = copy.deepcopy(FUSION)
+    fresh["accuracy"] = {"mape_fusion_aware": 1.2, "mape_additive": 1.0}
+    assert _gate(tmp_path, FUSION, fresh) == 1
+    # smoke runs don't gate the (noisy, tiny-sweep) MAPE invariant
+    fresh["mode"] = "smoke"
+    assert _gate(tmp_path, FUSION, fresh) == 0
+
+
+def test_mismatched_config_refuses_to_pass(tmp_path):
+    """A fresh run whose regime config differs (e.g. a smoke budget) has
+    no comparable cells -- the gate fails instead of passing vacuously."""
+    fresh = copy.deepcopy(TRAIN)
+    fresh["regimes"]["scale"]["config"]["n_collect"] = 20
+    assert _gate(tmp_path, TRAIN, fresh) == 1
+
+
+def test_benchmark_kind_mismatch_fails(tmp_path):
+    assert _gate(tmp_path, TRAIN, copy.deepcopy(ORACLE)) == 1

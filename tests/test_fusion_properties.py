@@ -1,0 +1,100 @@
+"""Hypothesis property tests for the fused multi-table cost model:
+monotone in fusion depth K and in total work, exact at K = 1, and the
+v1-artifact additive fallback reproduces the pre-fusion oracle numbers
+bitwise."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.api import MeasuredOracle                      # noqa: E402
+from repro.profiling.calibration import (CalibrationTable,  # noqa: E402
+                                         FusionModel)
+from repro.sim.costsim import per_device_sums             # noqa: E402
+
+models = st.builds(
+    FusionModel,
+    overhead_ms=st.floats(0.0, 0.5),
+    pipeline_coef=st.floats(0.0, 3.0),
+    pipeline_cap=st.floats(1.0, 6.0),
+)
+# per-table single-op times (ms); positive, spanning several decades
+times = st.lists(st.floats(1e-3, 1e3), min_size=1, max_size=12)
+
+
+@settings(max_examples=100, deadline=None)
+@given(model=models, ts=times, extra=st.floats(1e-3, 1e3))
+def test_fused_monotone_in_k(model, ts, extra):
+    """Adding a table to a fused op never lowers its cost (a table whose
+    marginal clamps to zero adds exactly nothing)."""
+    base = model.fused_ms(ts)
+    more = model.fused_ms(ts + [extra])
+    assert more >= base - 1e-12 * max(1.0, abs(base))
+
+
+@settings(max_examples=100, deadline=None)
+@given(model=models, ts=times, idx=st.integers(0, 11),
+       factor=st.floats(1.0, 10.0))
+def test_fused_monotone_in_total_work(model, ts, idx, factor):
+    """Growing any single table's time never lowers the fused cost."""
+    grown = list(ts)
+    grown[idx % len(ts)] *= factor
+    assert model.fused_ms(grown) >= \
+        model.fused_ms(ts) - 1e-12 * max(1.0, model.fused_ms(ts))
+
+
+@settings(max_examples=100, deadline=None)
+@given(model=models, t=st.floats(1e-3, 1e3))
+def test_fused_exact_at_k1(model, t):
+    """A single-table 'fused' op IS the single-table grid value, bitwise:
+    the correction must round-trip K = 1 exactly."""
+    assert model.fused_ms([t]) == t
+
+
+@settings(max_examples=50, deadline=None)
+@given(model=models,
+       seed=st.integers(0, 2**31 - 1),
+       n_tables=st.integers(2, 12),
+       n_devices=st.sampled_from([1, 2, 4]),
+       p=st.integers(1, 6))
+def test_device_ms_matches_scalar_fused(model, seed, n_tables, n_devices, p):
+    """The batched (lexsort + segment-sum) pricing agrees with the scalar
+    ``fused_ms`` on every (placement, device) group."""
+    rng = np.random.default_rng(seed)
+    per = rng.uniform(1e-3, 10.0, size=n_tables)
+    A = rng.integers(0, n_devices, size=(p, n_tables))
+    out = model.device_ms(per, A, n_devices)
+    for pi in range(p):
+        for d in range(n_devices):
+            expect = model.fused_ms(per[A[pi] == d])
+            assert out[pi, d] == pytest.approx(expect, rel=1e-12, abs=1e-15)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_devices=st.sampled_from([1, 2, 4]))
+def test_v1_fallback_is_bitwise_additive(tmp_path_factory, dlrm_pool,
+                                         save_v1_calibration, seed,
+                                         n_devices):
+    """A v1 artifact (no fused sweep) must price placements exactly as the
+    pre-fusion oracle did: the additive per-table segment sum, bit for
+    bit, for every placement."""
+    table = CalibrationTable.synthetic()
+    path = str(tmp_path_factory.mktemp("v1") / "cal.npz")
+    save_v1_calibration(table, path)
+    with pytest.warns(UserWarning, match="ADDITIVE"):
+        v1 = CalibrationTable.load(path)
+    assert v1.fusion_fwd.is_additive and v1.fusion_bwd.is_additive
+
+    rng = np.random.default_rng(seed)
+    raw = dlrm_pool[:10]
+    A = rng.integers(0, n_devices, size=(4, 10))
+    oracle = MeasuredOracle(v1)
+    per_fwd, per_bwd = oracle.per_table_ms(raw)
+    results = oracle.evaluate_many(raw, A, n_devices)
+    fwd = per_device_sums(A.astype(np.int64), n_devices, per_fwd)
+    bwd = per_device_sums(A.astype(np.int64), n_devices, per_bwd)
+    for i, res in enumerate(results):
+        np.testing.assert_array_equal(res.fwd_comp, fwd[i])
+        np.testing.assert_array_equal(res.bwd_comp, bwd[i])

@@ -11,7 +11,9 @@ from repro.models.layers import flash_attention as model_flash
 
 def _qkv(B, S, H, hd, dtype, seed=0):
     rng = np.random.default_rng(seed)
-    mk = lambda: jnp.asarray(rng.normal(size=(B, S, H, hd)) * 0.5, dtype)
+
+    def mk():
+        return jnp.asarray(rng.normal(size=(B, S, H, hd)) * 0.5, dtype)
     return mk(), mk(), mk()
 
 

@@ -9,7 +9,6 @@ import numpy as np
 
 from repro.checkpoint import restore_pytree, save_pytree
 from repro.data.pipeline import DLRMBatchStream, LMBatchStream, Prefetcher
-from repro.data.synthetic import make_dlrm_pool
 
 
 def test_lm_stream_deterministic_and_seekable():

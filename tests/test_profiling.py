@@ -1,7 +1,8 @@
 """Measured-cost profiling subsystem: calibration-table round-trip,
-interpolation semantics, MeasuredOracle protocol/monotonicity, comm
-model fitting, the calibrate CLI, the KernelOracle adapter regression,
-and DreamShard end-to-end on a MeasuredOracle."""
+interpolation semantics, the fused multi-table model (v2), MeasuredOracle
+protocol/monotonicity, comm model fitting, the calibrate CLI, the
+KernelOracle adapter regression, and DreamShard end-to-end on a
+MeasuredOracle."""
 
 import os
 import subprocess
@@ -11,12 +12,12 @@ import numpy as np
 import pytest
 
 from repro.api import CostOracle, KernelOracle, MeasuredOracle
-from repro.core import baselines as B
 from repro.core.trainer import DreamShard, DreamShardConfig
 from repro.data.tasks import sample_tasks, split_pool
 from repro.profiling import (CALIBRATION_VERSION, CalibrationTable,
-                             CommModel, default_artifact_path,
+                             CommModel, FusionModel, default_artifact_path,
                              fit_alpha_beta, load_or_none, synthetic_trace)
+from repro.profiling.calibrate import main as calibrate_main
 from repro.sim.hardware import PAPER_GPU
 
 
@@ -117,6 +118,109 @@ def test_table_validates_grids():
                          fwd_ms=np.zeros((1, 1, 1, 1)),
                          bwd_ms=np.zeros((1, 1, 1, 1)),
                          comm=CommModel.from_spec(), fingerprint={})
+
+
+# ---- fused multi-table model (v2) --------------------------------------------
+
+
+def test_fusion_fit_recovers_clean_model():
+    """On noise-free samples generated by a model inside the search grid,
+    the fit reproduces it (c0 is closed-form; coef/cap grid-searched)."""
+    true = FusionModel(overhead_ms=0.2, pipeline_coef=0.33962106564175104,
+                       pipeline_cap=2.0, source="measured")
+    rng = np.random.default_rng(0)
+    singles = [rng.uniform(0.3, 5.0, size=k)
+               for k in (2, 2, 3, 4, 4, 6, 8, 8)]
+    fused = np.array([true.fused_ms(t) for t in singles])
+    fit = FusionModel.fit(singles, fused)
+    assert fit.fit_mape < 1e-6
+    assert fit.overhead_ms == pytest.approx(true.overhead_ms, rel=1e-6)
+    assert fit.pipeline_coef == pytest.approx(true.pipeline_coef, rel=1e-6)
+    assert fit.pipeline_cap == true.pipeline_cap
+    assert fit.additive_mape > fit.fit_mape
+    assert fit.n_samples == len(singles)
+
+
+def test_fusion_additive_identity(dlrm_pool):
+    """The additive model is the exact per-table sum -- and drives the
+    fast path in device pricing (bitwise the pre-v2 arithmetic)."""
+    add = FusionModel.additive()
+    assert add.is_additive
+    ts = np.array([0.4, 0.1, 2.5])
+    assert add.fused_ms(ts) == float(ts.sum())
+    assert not FusionModel.from_spec(PAPER_GPU).is_additive
+
+
+def test_v2_roundtrip_preserves_fusion(synth_table, tmp_path):
+    path = synth_table.save(str(tmp_path / "v2.npz"))
+    loaded = CalibrationTable.load(path)
+    assert loaded.fusion_fwd == synth_table.fusion_fwd
+    assert loaded.fusion_bwd == synth_table.fusion_bwd
+    assert loaded.fusion_fwd.source == "synthetic"
+    for k, v in synth_table.fusion_sweep.items():
+        np.testing.assert_array_equal(loaded.fusion_sweep[k], v)
+
+
+def test_v1_artifact_loads_additive_with_warning(synth_table, tmp_path,
+                                                save_v1_calibration):
+    path = str(tmp_path / "v1.npz")
+    save_v1_calibration(synth_table, path)
+    with pytest.warns(UserWarning, match="ADDITIVE"):
+        v1 = CalibrationTable.load(path)
+    assert v1.version == 1
+    assert v1.fusion_fwd.is_additive and v1.fusion_bwd.is_additive
+    assert v1.fusion_fwd.source == "v1-fallback"
+
+
+def test_calibrate_cli_regenerates_v1_artifact(synth_table, tmp_path,
+                                               capsys,
+                                               save_v1_calibration):
+    """An existing artifact that predates schema v2 is re-measured, not
+    skipped -- and the refreshed artifact carries a measured fusion fit."""
+    out = str(tmp_path / "cal.npz")
+    save_v1_calibration(synth_table, out)
+    argv = ["--out", out, "--dims", "16", "--rows", "128", "--batches", "8",
+            "--poolings", "2", "--repeats", "1", "--fused-ks", "2",
+            "--fused-per-k", "1", "--pallas", "off"]
+    assert calibrate_main(argv) == 0
+    assert "re-measuring" in capsys.readouterr().out
+    table = CalibrationTable.load(out)
+    assert table.version == CALIBRATION_VERSION
+    assert table.fusion_fwd.source == "measured"
+    # and a second run with the now-current artifact is a no-op
+    assert calibrate_main(argv) == 0
+    assert "up to date" in capsys.readouterr().out
+
+
+def test_fusion_pricing_engaged_on_v2(synth_table, tasks20):
+    """A v2 table's fusion model actually changes multi-table pricing:
+    fused < additive whenever a device holds >= 2 tables (overhead
+    amortization), identical on single-table devices."""
+    t = tasks20[0]
+    a = np.arange(t.n_tables) % t.n_devices
+    fused = MeasuredOracle(synth_table, batch_size=1024).evaluate(
+        t.raw_features, a, t.n_devices)
+    additive = MeasuredOracle(synth_table, batch_size=1024,
+                              fusion=False).evaluate(
+        t.raw_features, a, t.n_devices)
+    assert (fused.fwd_comp < additive.fwd_comp).all()
+    assert fused.overall < additive.overall
+    one = np.zeros(1, np.int64)
+    f1 = MeasuredOracle(synth_table).evaluate(t.raw_features[:1], one, 1)
+    a1 = MeasuredOracle(synth_table, fusion=False).evaluate(
+        t.raw_features[:1], one, 1)
+    np.testing.assert_array_equal(f1.fwd_comp, a1.fwd_comp)
+
+
+def test_measure_placement_per_table_pooling(dlrm_pool):
+    """pooling=None takes each table's own pooling factor from raw."""
+    from repro.profiling import measure_placement
+    raw = dlrm_pool[:3].copy()
+    raw[:, 2] = [2.0, 5.0, 3.0]                      # F.POOLING
+    res = measure_placement(raw, np.zeros(3, np.int64), 1, batch_size=4,
+                            pooling=None, max_rows=64, repeats=1)
+    assert np.isfinite(res.overall) and res.overall > 0
+    assert res.fwd_comp[0] > 0 and res.bwd_comp[0] > 0
 
 
 # ---- comm model --------------------------------------------------------------

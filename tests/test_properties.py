@@ -6,11 +6,11 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import baselines as B
-from repro.core import features as F
-from repro.data.synthetic import make_pool
-from repro.embedding.plan import build_plan
-from repro.sim.costsim import CostSimulator
+from repro.core import baselines as B  # noqa: E402
+from repro.core import features as F  # noqa: E402
+from repro.data.synthetic import make_pool  # noqa: E402
+from repro.embedding.plan import build_plan  # noqa: E402
+from repro.sim.costsim import CostSimulator  # noqa: E402
 
 table_counts = st.integers(min_value=2, max_value=40)
 device_counts = st.sampled_from([1, 2, 4, 8])

@@ -55,8 +55,6 @@ def test_overall_is_sum_of_stage_maxima(dlrm_pool):
     sim = CostSimulator(noise_std=0.0)
     a = np.array([0, 1, 2, 3] * 3)
     r = sim.evaluate(dlrm_pool[:12], a, 4)
-    expect = (r.fwd_comp.max() + r.bwd_comm.max() * 2 / 2
-              + r.bwd_comm.max() + r.bwd_comp.max())
     # fwd comm max == bwd comm max without noise
     assert r.overall == pytest.approx(
         r.fwd_comp.max() + 2 * r.bwd_comm.max() + r.bwd_comp.max(), rel=1e-6)
