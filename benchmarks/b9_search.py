@@ -1,0 +1,228 @@
+"""B9: search-augmented placement -- cost vs anytime budget.
+
+DreamShard's policy emits one placement per task; Pre-train-and-Search
+(PAPERS.md) shows a cheap cost model turns placement into a search
+problem.  PR 4 made oracle queries nearly free here (evaluate_many,
+BENCH_oracle.json), so this benchmark measures what that buys: seed each
+task with the trained agent's proposal, refine it with ``SearchPlacer``,
+and trace the **anytime curve** -- mean placement cost as a function of
+the oracle-row budget -- for all three strategy families (LNS,
+evolution, beam), plus one wall-clock headline row at the 50 ms/task
+budget the acceptance criterion names.  A ``CachedOracle`` leg re-runs
+the refinement to expose search's cache locality (batched hit-rate).
+
+Regimes (fixed configs, so smoke CI runs gate against the committed
+baseline):
+
+* ``quick`` -- DLRM-20 (4), reduced trainer budget; CI-sized;
+* ``paper`` -- DLRM-50 (4), the paper's Algorithm-1 budget (full only).
+
+Writes ``BENCH_search.json`` (committed at the repo root).  Full mode
+asserts the acceptance criterion: RL+search at <= 50 ms/task strictly
+improves mean cost over DreamShard-only on the paper-scale suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common as C                             # noqa: E402
+from repro.api import (CachedOracle, SearchConfig,             # noqa: E402
+                       SearchPlacer, ensure_oracle,
+                       measure_placements)
+from repro.core.trainer import DreamShardConfig                # noqa: E402
+from repro.data.tasks import make_benchmark_suite              # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# fixed per-regime configs: smoke runs the quick regime at its FULL
+# config, so the check_bench gate always has a comparable cell
+REGIMES = {
+    "quick": {
+        "dataset": "DLRM", "n_tables": 20, "n_devices": 4, "n_tasks": 8,
+        "trainer": "reduced",
+    },
+    "paper": {
+        "dataset": "DLRM", "n_tables": 50, "n_devices": 4, "n_tasks": 16,
+        "trainer": "paper",
+    },
+}
+CURVE_EVALS = [0, 8, 32, 128]         # deterministic anytime-budget axis
+STRATEGIES = ["lns", "evolution", "beam"]
+HEADLINE_BUDGET_MS = 50.0
+
+
+def _trainer_cfg(kind: str) -> DreamShardConfig:
+    if kind == "paper":
+        return DreamShardConfig()
+    return DreamShardConfig(n_iterations=3, n_collect=6, n_cost=100,
+                            n_batch=32, n_rl=5, n_episode=10,
+                            inference_candidates=8)
+
+
+def _mean_cost(sim, tasks, placements) -> float:
+    return float(np.mean(measure_placements(
+        ensure_oracle(sim), tasks, placements)))
+
+
+def _curve(sim, agent, tasks, strategy: str) -> dict:
+    """Mean cost at each row budget -- monotone by construction."""
+    costs, hw_evals = [], []
+    for max_evals in CURVE_EVALS:
+        oracle = ensure_oracle(sim)
+        sp = SearchPlacer(oracle, seed_placer=agent.as_placer(),
+                          agent=agent,
+                          config=SearchConfig(strategy=strategy,
+                                              budget_ms=None,
+                                              max_evals=max_evals, seed=0))
+        n0 = oracle.num_evaluations      # counter lives on the shared sim
+        placements = sp.place_many(tasks)
+        hw_evals.append(int(oracle.num_evaluations - n0))
+        costs.append(round(_mean_cost(sim, tasks, placements), 4))
+    return {"max_evals": CURVE_EVALS, "mean_cost_ms": costs,
+            "oracle_evals_total": hw_evals}
+
+
+def _headline(sim, agent, tasks) -> dict:
+    """The acceptance row: LNS at a 50 ms/task wall-clock budget."""
+    oracle = ensure_oracle(sim)
+    sp = C.make_search_placer(oracle, agent,
+                              budget_ms=HEADLINE_BUDGET_MS, seed=0)
+    evals, ms = [], []
+    placements = []
+    for task, seed in zip(tasks, agent.as_placer().place_many(tasks)):
+        t0 = time.perf_counter()
+        placements.append(sp.refine(task, seed))
+        ms.append((time.perf_counter() - t0) * 1e3)
+        evals.append(sp.last_scorer.evals)
+    return {
+        "strategy": "lns", "budget_ms": HEADLINE_BUDGET_MS,
+        "mean_cost_ms": round(_mean_cost(sim, tasks, placements), 4),
+        "mean_wall_ms_per_task": round(float(np.mean(ms)), 2),
+        "mean_evals_per_task": round(float(np.mean(evals)), 1),
+    }
+
+
+def _cache_leg(sim, agent, tasks) -> dict:
+    """Refine the same suite twice through one CachedOracle: the second
+    pass is pure cache (search proposals are deterministic per seed)."""
+    cached = CachedOracle(sim)
+    hardware = []
+    for _ in range(2):
+        sp = SearchPlacer(cached, seed_placer=agent.as_placer(),
+                          agent=agent,
+                          config=SearchConfig(strategy="lns",
+                                              budget_ms=None,
+                                              max_evals=128, seed=0))
+        n0 = cached.num_evaluations
+        sp.place_many(tasks)
+        hardware.append(cached.num_evaluations - n0)
+    info = cached.info()
+    return {
+        "batched_calls": info["batched_calls"],
+        "batched_hit_rate": round(info["batched_hit_rate"], 4),
+        "hardware_evals_pass1": hardware[0],
+        "hardware_evals_pass2": hardware[1],
+    }
+
+
+def _run_regime(name: str, spec: dict) -> dict:
+    pool = C.get_pool(spec["dataset"])
+    sim = C.get_sim(spec["dataset"])
+    train, test = make_benchmark_suite(pool, spec["n_tables"],
+                                       spec["n_devices"],
+                                       n_tasks=spec["n_tasks"], seed=0)
+    with C.Timer() as t_train:
+        agent = C.train_dreamshard(train, sim, _trainer_cfg(spec["trainer"]))
+    ds_cost = _mean_cost(sim, test, agent.as_placer().place_many(test))
+
+    curves = {}
+    for strategy in STRATEGIES:
+        curves[strategy] = _curve(sim, agent, test, strategy)
+        print({"regime": name, "strategy": strategy, **curves[strategy]},
+              flush=True)
+    headline = _headline(sim, agent, test)
+    cache = _cache_leg(sim, agent, test)
+    row = {
+        "config": spec,
+        "dreamshard_mean_cost_ms": round(ds_cost, 4),
+        "curves": curves,
+        "headline_budget": headline,
+        "cache": cache,
+        "train_s": round(t_train.s, 1),
+    }
+    gain = (ds_cost / headline["mean_cost_ms"] - 1) * 100 \
+        if headline["mean_cost_ms"] else 0.0
+    row["search_gain_pct"] = round(gain, 2)
+    print({"regime": name, "dreamshard": row["dreamshard_mean_cost_ms"],
+           "rl_search_50ms": headline["mean_cost_ms"],
+           "gain_pct": row["search_gain_pct"]}, flush=True)
+    return row
+
+
+def run(smoke: bool = False, out: str | None = None,
+        regimes: list[str] | None = None):
+    selected = ["quick"] if smoke else list(REGIMES)
+    if regimes:
+        selected = [r for r in selected if r in regimes] or \
+            [r for r in REGIMES if r in regimes]
+        if not selected:
+            raise SystemExit(f"no such regime(s) {regimes}")
+
+    result = {
+        "benchmark": "b9_search",
+        "schema": 1,
+        "mode": "smoke" if smoke else "full",
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "curve_evals": CURVE_EVALS,
+        "host": {"cpu_count": os.cpu_count(), "numpy": np.__version__},
+        "regimes": {},
+    }
+    for name in selected:
+        result["regimes"][name] = _run_regime(name, REGIMES[name])
+
+    head_name = "paper" if "paper" in result["regimes"] \
+        else next(iter(result["regimes"]))
+    reg = result["regimes"][head_name]
+    result["headline"] = {
+        "regime": head_name,
+        "dreamshard_mean_cost_ms": reg["dreamshard_mean_cost_ms"],
+        "rl_search_mean_cost_ms": reg["headline_budget"]["mean_cost_ms"],
+        "budget_ms": HEADLINE_BUDGET_MS,
+        "search_gain_pct": reg["search_gain_pct"],
+        "cache_batched_hit_rate": reg["cache"]["batched_hit_rate"],
+    }
+    if not smoke:
+        # the PR's acceptance criterion, asserted at the source
+        assert reg["headline_budget"]["mean_cost_ms"] < \
+            reg["dreamshard_mean_cost_ms"], \
+            "RL+search at 50 ms/task did not strictly improve on " \
+            "DreamShard-only"
+    out = out or os.path.join(ROOT, "BENCH_search.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print({"headline": result["headline"], "written": os.path.abspath(out)},
+          flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick regime only (same config as full: the "
+                         "bench gate stays comparable)")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--regimes", default=None,
+                    help="comma-separated regime subset (quick, paper)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out,
+        regimes=args.regimes.split(",") if args.regimes else None)

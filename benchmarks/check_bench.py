@@ -160,10 +160,50 @@ def check_fusion(gate: Gate, baseline: dict, fresh: dict) -> None:
         )
 
 
+def check_search(gate: Gate, baseline: dict, fresh: dict) -> None:
+    """b9: search must (still) beat the RL-only policy, and the anytime
+    curves must stay monotone.  Invariants run on the FRESH file -- they
+    hold per-host by construction, so every smoke run re-proves them --
+    while eval-cost drift is gated only on config-matched regimes."""
+    for name, reg in fresh.get("regimes", {}).items():
+        head = reg["headline_budget"]
+        gate.invariant(
+            f"b9.{name}.search_beats_dreamshard",
+            head["mean_cost_ms"] <= reg["dreamshard_mean_cost_ms"],
+            f"RL+search {head['mean_cost_ms']} ms vs DreamShard-only "
+            f"{reg['dreamshard_mean_cost_ms']} ms "
+            f"at {head['budget_ms']} ms/task",
+        )
+        for strategy, curve in reg["curves"].items():
+            costs = curve["mean_cost_ms"]
+            gate.invariant(
+                f"b9.{name}.{strategy}.anytime_monotone",
+                all(b <= a + 1e-9 for a, b in zip(costs, costs[1:])),
+                f"cost vs max_evals {curve['max_evals']}: {costs}",
+            )
+    for regime in _matched_regimes(baseline, fresh):
+        b, f = baseline["regimes"][regime], fresh["regimes"][regime]
+        gate.eval_cost(
+            f"b9.{regime}.dreamshard_mean_cost_ms",
+            b["dreamshard_mean_cost_ms"],
+            f["dreamshard_mean_cost_ms"],
+        )
+        for strategy in b["curves"]:
+            if strategy in f["curves"] and \
+                    b["curves"][strategy]["max_evals"] == \
+                    f["curves"][strategy]["max_evals"]:
+                gate.eval_cost(
+                    f"b9.{regime}.{strategy}.curve_final_cost",
+                    b["curves"][strategy]["mean_cost_ms"][-1],
+                    f["curves"][strategy]["mean_cost_ms"][-1],
+                )
+
+
 CHECKERS = {
     "b6_train_throughput": check_train,
     "b7_oracle_throughput": check_oracle,
     "b8_fusion_model": check_fusion,
+    "b9_search": check_search,
 }
 
 

@@ -75,6 +75,21 @@ def train_rnn(train_tasks, sim, n_updates=None) -> RNNPlacer:
     return placer
 
 
+def make_search_placer(sim, agent, strategy="lns", budget_ms=50.0,
+                       max_evals=None, seed=0, name=None):
+    """RL+search: a ``SearchPlacer`` refining the agent's proposals.
+
+    The default is the benchmark headline configuration -- LNS under a
+    50 ms/task anytime budget, seeded by the trained DreamShard.
+    """
+    from repro.api import SearchConfig, SearchPlacer
+    oracle = ensure_oracle(sim)
+    cfg = SearchConfig(strategy=strategy, budget_ms=budget_ms,
+                       max_evals=max_evals, seed=seed)
+    return SearchPlacer(oracle, seed_placer=agent.as_placer(), config=cfg,
+                        agent=agent, name=name)
+
+
 def speedup(base: float, val: float) -> str:
     return f"{(base / val - 1) * 100:+.1f}%"
 

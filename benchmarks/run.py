@@ -30,6 +30,7 @@ MODULES = [
     "b6_train_throughput",    # fused Algorithm-1 loop vs seed per-step loop
     "b7_oracle_throughput",   # batched evaluate_many vs per-placement loop
     "b8_fusion_model",        # fusion-aware vs additive multi-table costs
+    "b9_search",              # search-augmented placement anytime curves
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

@@ -34,12 +34,14 @@ def run():
         with C.Timer() as t_train:
             ds = C.train_dreamshard(train, sim, cfg)
         rnn = C.train_rnn(train, sim)
+        search = C.make_search_placer(sim, ds)
         for split, tasks in (("train", train), ("test", test)):
             scores = C.eval_all_baselines(sim, tasks)
             scores["rnn"] = C.eval_placer(sim, tasks, rnn.as_placer())
             scores["dreamshard"] = C.eval_placer(sim, tasks, ds.as_placer())
+            scores["dreamshard_search"] = C.eval_placer(sim, tasks, search)
             best_baseline = min(v for k, v in scores.items()
-                                if k != "dreamshard")
+                                if not k.startswith("dreamshard"))
             rows.append({
                 "task": f"{dataset}-{m} ({d})", "split": split,
                 **{k: round(v, 2) for k, v in scores.items()},
@@ -47,6 +49,8 @@ def run():
                                                scores["dreamshard"]),
                 "speedup_vs_best_baseline": C.speedup(best_baseline,
                                                       scores["dreamshard"]),
+                "search_gain": C.speedup(scores["dreamshard"],
+                                         scores["dreamshard_search"]),
                 "beats_all": scores["dreamshard"] <= best_baseline * 1.001,
                 "train_s": round(t_train.s, 1),
             })

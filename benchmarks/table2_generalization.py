@@ -34,13 +34,19 @@ def run():
         baselines = C.eval_all_baselines(sim, test_t)
         native = C.eval_placer(sim, test_t, agents[(tm, td)].as_placer())
         transferred = C.eval_placer(sim, test_t, agents[(sm, sd)].as_placer())
+        # search-refined transfer: same zero-shot agent, its proposals
+        # polished per target task through the batched oracle
+        transferred_search = C.eval_placer(
+            sim, test_t, C.make_search_placer(sim, agents[(sm, sd)]))
         rows.append({
             "source": f"DLRM-{sm} ({sd})", "target": f"DLRM-{tm} ({td})",
             "random": round(baselines["random"], 2),
             "best_baseline": round(min(baselines.values()), 2),
             "trained_on_target": round(native, 2),
             "transferred": round(transferred, 2),
+            "transferred_search": round(transferred_search, 2),
             "transfer_gap_ms": round(transferred - native, 2),
+            "search_gap_ms": round(transferred_search - native, 2),
         })
         print(rows[-1], flush=True)
     return rows

@@ -14,7 +14,11 @@ One interface over every placement strategy and cost backend:
   ``PlacementPlan``, estimated cost, provenance) with adapters for
   DreamShard, the RNN baseline, expert heuristics, and random;
 * ``PlacementSession`` -- batched DreamShard serving: tasks bucketed by
-  padded ``(M, D)`` shape, many tasks decoded per jitted call.
+  padded ``(M, D)`` shape, many tasks decoded per jitted call, with an
+  optional post-decode ``refiner`` pass;
+* ``SearchPlacer`` / ``SearchConfig`` (re-exported lazily from
+  ``repro.search``) -- anytime search refinement of any seed placer
+  through the batched oracle.
 
 See ``docs/api.md`` for usage and the migration guide.
 """
@@ -25,15 +29,32 @@ from repro.api.oracle import (CachedOracle, CostOracle, KernelOracle,
 from repro.api.placement import (BasePlacer, Placement, Placer,
                                  evaluate_placements, evaluate_placer,
                                  measure_placements)
-from repro.api.placers import (DreamShardPlacer, ExpertPlacer, RNNPlacerAdapter,
+from repro.api.placers import (DreamShardPlacer, ExpertPlacer,
+                               PortfolioPlacer, RNNPlacerAdapter,
                                RandomPlacer, make_baseline_placers)
 from repro.api.session import PlacementSession
+
+# repro.search imports from repro.api, so its names are re-exported
+# lazily (PEP 562) to keep `import repro.api` cycle-free
+_SEARCH_EXPORTS = ("SearchConfig", "SearchPlacer", "SearchScorer")
 
 __all__ = [
     "BasePlacer", "CachedOracle", "CostOracle", "DreamShardPlacer",
     "ExpertPlacer", "KernelOracle", "MeasuredOracle", "Placement",
-    "PlacementSession", "Placer",
-    "RNNPlacerAdapter", "RandomPlacer", "SimOracle", "ensure_oracle",
+    "PlacementSession", "Placer", "PortfolioPlacer",
+    "RNNPlacerAdapter", "RandomPlacer", "SearchConfig", "SearchPlacer",
+    "SearchScorer", "SimOracle", "ensure_oracle",
     "evaluate_many", "evaluate_placements", "evaluate_placer", "legal_batch",
     "make_baseline_placers", "measure_placements",
 ]
+
+
+def __getattr__(name: str):
+    if name in _SEARCH_EXPORTS:
+        import repro.search as _search
+        return getattr(_search, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

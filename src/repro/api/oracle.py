@@ -155,6 +155,13 @@ class CachedOracle:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        # per-evaluate_many accounting: search workloads hammer the cache
+        # with near-duplicate batches, and these make that locality
+        # visible (b9 reports the batched hit-rate per budget point)
+        self.batched_calls = 0
+        self.batch_hits = 0
+        self.batch_misses = 0
+        self.last_batch: dict = {"rows": 0, "hits": 0, "misses": 0}
         self._cache: dict[bytes, SimResult] = {}
 
     @property
@@ -213,6 +220,7 @@ class CachedOracle:
         cache.  Results follow input row order."""
         assignments = check_assignment_batch(assignments, n_devices)
         keys = self._keys_batch(raw, assignments, n_devices)
+        hits0, misses0 = self.hits, self.misses
         out: list[SimResult | None] = [None] * len(keys)
         miss_slot: dict[bytes, int] = {}     # key -> index into miss batch
         miss_rows: list[int] = []
@@ -237,6 +245,11 @@ class CachedOracle:
             for i, key in enumerate(keys):
                 if out[i] is None:
                     out[i] = fresh[miss_slot[key]]
+        self.batched_calls += 1
+        self.batch_hits += self.hits - hits0
+        self.batch_misses += self.misses - misses0
+        self.last_batch = {"rows": len(keys), "hits": self.hits - hits0,
+                           "misses": self.misses - misses0}
         return out
 
     def legal(self, raw, assignment, n_devices) -> bool:
@@ -247,11 +260,20 @@ class CachedOracle:
         return legal_batch(self.inner, raw, assignments, n_devices)
 
     def info(self) -> dict:
-        """Cache behaviour snapshot (hit rate, occupancy, policy)."""
+        """Cache behaviour snapshot (hit rate, occupancy, policy), with
+        the batched-path split: ``batched_*`` counts only rows that went
+        through ``evaluate_many`` (``batched_hit_rate`` is the number a
+        search workload cares about -- its scoring path is all batched)."""
         total = self.hits + self.misses
+        btotal = self.batch_hits + self.batch_misses
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._cache), "max_entries": self.max_entries,
                 "hit_rate": self.hits / total if total else 0.0,
+                "batched_calls": self.batched_calls,
+                "batched_hits": self.batch_hits,
+                "batched_misses": self.batch_misses,
+                "batched_hit_rate": self.batch_hits / btotal if btotal
+                else 0.0,
                 "eviction": "lru"}
 
 

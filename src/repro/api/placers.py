@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api.oracle import ensure_oracle
+from repro.api.oracle import ensure_oracle, evaluate_many
 from repro.api.placement import BasePlacer, Placement
 from repro.api.session import PlacementSession
 from repro.core import baselines as B
@@ -30,10 +30,13 @@ class DreamShardPlacer(BasePlacer):
     name = "dreamshard"
 
     def __init__(self, agent, n_candidates: int | None = None,
-                 bucket_tables: int = 8):
+                 bucket_tables: int = 8, refiner=None):
         self.agent = agent
         self.session = PlacementSession(agent, n_candidates=n_candidates,
-                                        bucket_tables=bucket_tables)
+                                        bucket_tables=bucket_tables,
+                                        refiner=refiner)
+        if refiner is not None:
+            self.name = f"dreamshard+{getattr(refiner, 'name', 'refined')}"
 
     def place(self, task: Task) -> Placement:
         return self.session.place(task)       # reuses bucket traces
@@ -75,24 +78,97 @@ class ExpertPlacer(BasePlacer):
 class RandomPlacer(BasePlacer):
     """Memory-legal random placement (stateful rng, like the legacy helper:
     successive calls consume the same stream as ``random_place`` with a
-    shared generator)."""
+    shared generator).
+
+    ``n_candidates > 1`` draws that many placements and keeps the
+    oracle-measured best, scored in ONE ``evaluate_many`` batch -- never a
+    per-candidate ``evaluate`` loop (``tests/test_search.py`` counts the
+    dispatches).  The default stays 1: the paper's random baseline is
+    single-shot and hardware-free.
+    """
 
     name = "random"
 
-    def __init__(self, oracle, seed: int = 0):
+    def __init__(self, oracle, seed: int = 0, n_candidates: int = 1):
         self.oracle = ensure_oracle(oracle)
         self.rng = np.random.default_rng(seed)
+        self.n_candidates = max(1, n_candidates)
 
     def place(self, task: Task) -> Placement:
-        a = B.random_place(task.raw_features, task.n_devices,
-                           self.oracle.mem_capacity_gb, self.rng)
-        return self._wrap(task, a)
+        cap = self.oracle.mem_capacity_gb
+        A = np.stack([B.random_place(task.raw_features, task.n_devices,
+                                     cap, self.rng)
+                      for _ in range(self.n_candidates)])
+        if self.n_candidates == 1:
+            return self._wrap(task, A[0])
+        evals0 = self.oracle.num_evaluations
+        results = evaluate_many(self.oracle, task.raw_features, A,
+                                task.n_devices)
+        costs = np.array([r.overall for r in results])
+        best = int(np.argmin(costs))
+        return self._wrap(task, A[best], est_cost_ms=float(costs[best]),
+                          candidates=self.n_candidates,
+                          oracle_evals=self.oracle.num_evaluations - evals0)
 
 
-def make_baseline_placers(oracle, seed: int = 0) -> dict[str, BasePlacer]:
-    """Random + the four expert heuristics, keyed by strategy name."""
+class PortfolioPlacer(BasePlacer):
+    """Best-of-N over member placers, scored through ONE batched oracle
+    pass per task.
+
+    The members' proposals (e.g. the four expert heuristics, which were
+    previously only comparable by looping per-strategy ``evaluate``
+    calls) are stacked into a single ``(N, M)`` assignment matrix and
+    measured with one ``evaluate_many`` call; the cheapest wins.  This is
+    the degenerate no-search ancestor of ``repro.search.SearchPlacer`` --
+    portfolio picks among fixed proposals, search keeps refining them.
+    """
+
+    def __init__(self, oracle, placers: dict[str, BasePlacer],
+                 name: str = "portfolio"):
+        if not placers:
+            raise ValueError("PortfolioPlacer needs at least one member")
+        self.oracle = ensure_oracle(oracle)
+        self.placers = dict(placers)
+        self.name = name
+
+    def place_many(self, tasks) -> list[Placement]:
+        tasks = list(tasks)
+        proposals = {k: p.place_many(tasks)          # members may batch
+                     for k, p in self.placers.items()}
+        out = []
+        for i, task in enumerate(tasks):
+            cands = [proposals[k][i] for k in self.placers]
+            A = np.stack([c.assignment for c in cands])
+            evals0 = self.oracle.num_evaluations
+            results = evaluate_many(self.oracle, task.raw_features, A,
+                                    task.n_devices)
+            costs = np.array([r.overall for r in results])
+            best = int(np.argmin(costs))
+            out.append(Placement(
+                assignment=cands[best].assignment, plan=cands[best].plan,
+                n_devices=task.n_devices, strategy=self.name,
+                est_cost_ms=float(costs[best]), candidates=len(cands),
+                oracle_evals=self.oracle.num_evaluations - evals0))
+        return out
+
+    def place(self, task: Task) -> Placement:
+        return self.place_many([task])[0]
+
+
+def make_baseline_placers(oracle, seed: int = 0,
+                          include_portfolio: bool = False
+                          ) -> dict[str, BasePlacer]:
+    """Random + the four expert heuristics, keyed by strategy name.
+
+    ``include_portfolio=True`` adds ``"expert_best"``: the batched
+    best-of-the-four-experts portfolio (one ``evaluate_many`` per task).
+    """
     oracle = ensure_oracle(oracle)
     placers: dict[str, BasePlacer] = {"random": RandomPlacer(oracle, seed)}
     for s in B.EXPERT_STRATEGIES:
         placers[s] = ExpertPlacer(oracle, s)
+    if include_portfolio:
+        experts = {s: placers[s] for s in B.EXPERT_STRATEGIES}
+        placers["expert_best"] = PortfolioPlacer(oracle, experts,
+                                                 name="expert_best")
     return placers

@@ -72,13 +72,20 @@ class PlacementSession:
     bucket_tables: bucket granularity -- table counts are padded up to the
         next multiple, trading a little padded compute for far fewer
         compiles across heterogeneous suites.
+    refiner: optional post-decode refinement pass -- anything with a
+        ``refine(task, placement) -> Placement`` method (canonically a
+        ``repro.search.SearchPlacer``).  Each decoded placement is handed
+        to the refiner before being returned, so a session can serve
+        RL+search placements under one handle; ``refiner=None`` (the
+        default) serves the raw decode.
     """
 
     def __init__(self, agent, n_candidates: int | None = None,
-                 bucket_tables: int = 8):
+                 bucket_tables: int = 8, refiner=None):
         self.agent = agent
         self._n_candidates_override = n_candidates
         self.bucket_tables = max(1, bucket_tables)
+        self.refiner = refiner
         self.num_compiles = 0          # distinct bucket shapes traced
         self.num_decode_calls = 0      # jitted decode invocations
         self._decode_fns: dict[tuple, callable] = {}
@@ -166,6 +173,8 @@ class PlacementSession:
                     n_devices=n_devices, strategy="dreamshard",
                     est_cost_ms=float(est[j, best]),
                     candidates=self.n_candidates, oracle_evals=0)
+        if self.refiner is not None:
+            out = [self.refiner.refine(t, p) for t, p in zip(tasks, out)]
         return out
 
     def place(self, task: Task) -> Placement:

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.oracle import CostOracle, ensure_oracle
+from repro.api.oracle import CostOracle, ensure_oracle, evaluate_many
 from repro.core import features as F
 from repro.core import networks as N
 from repro.core import rollout as R
@@ -157,10 +157,12 @@ class RNNPlacer:
             sample = self._sample_fn(task.n_devices, self.cfg.n_episode, False)
             actions = np.asarray(sample(self.params, feats, sizes, cap,
                                         self._next_key()))
-            rewards = np.array([
-                -self.oracle.evaluate(task.raw_features, a,
-                                      task.n_devices).overall
-                for a in actions])
+            # all n_episode rewards in ONE batched oracle pass
+            # (bitwise-identical to per-episode evaluate calls)
+            results = evaluate_many(self.oracle, task.raw_features,
+                                    actions.astype(np.int64),
+                                    task.n_devices)
+            rewards = -np.array([r.overall for r in results])
             adv = (rewards - rewards.mean()) / 10.0   # same 10ms scaling
             grads = self._grad_fn(task.n_devices, self.cfg.n_episode)(
                 self.params, feats, sizes, cap, jnp.asarray(actions),

@@ -1,0 +1,376 @@
+"""Search-augmented placement invariants.
+
+Property suite over the ``repro.search`` subsystem: refined cost <=
+seed cost on every task, legality preserved under capacity constraints,
+anytime monotonicity (a larger eval budget never worsens the result),
+and zero-budget bitwise identity.  Plus dispatch guards (search and the
+candidate-scoring placers must talk to the oracle ONLY through
+``evaluate_many``) and the session refiner pass.
+
+The property tests run under hypothesis when it is installed; without
+it they fall back to a fixed deterministic parameter grid, so the
+invariants are exercised either way (the dependency is optional, never
+required -- same policy as ``test_fusion_properties``, which skips).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.api import (CachedOracle, PlacementSession,       # noqa: E402
+                       RandomPlacer, SearchConfig, SearchPlacer,
+                       SimOracle, make_baseline_placers)
+from repro.core import features as F                         # noqa: E402
+from repro.core.trainer import (DreamShard,                  # noqa: E402
+                                DreamShardConfig)
+from repro.data.tasks import Task, sample_tasks, split_pool  # noqa: E402
+from repro.search import SearchScorer                        # noqa: E402
+from repro.sim.costsim import CostSimulator                  # noqa: E402
+
+
+def property_test(make_strategies, grid, max_examples=20):
+    """``@given`` under hypothesis, else parametrize over ``grid``.
+
+    ``make_strategies`` is a zero-arg callable returning the kwargs for
+    ``given`` (lazy so ``st`` is only touched when hypothesis exists);
+    ``grid`` is a list of kwargs dicts sharing the same keys.
+    """
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(**make_strategies())(fn))
+        keys = list(grid[0])
+        rows = [tuple(row[k] for k in keys) for row in grid]
+        return pytest.mark.parametrize(",".join(keys), rows)(fn)
+    return deco
+
+
+def _oracle():
+    return SimOracle(CostSimulator(seed=0))
+
+
+def _tasks(pool, n_tables, n_devices, n_tasks, seed):
+    _, ids = split_pool(pool, seed=0)
+    return sample_tasks(pool, ids, n_tables, n_devices, n_tasks, seed=seed)
+
+
+def _cost(task, assignment):
+    """Reference cost from a fresh sim: bitwise-stable, state-free."""
+    return CostSimulator(seed=0).evaluate(task.raw_features, assignment,
+                                          task.n_devices).overall
+
+
+@pytest.fixture(scope="module")
+def tiny_agent(dlrm_pool):
+    """A minimally-trained DreamShard: enough for beam search to have a
+    real cost network to score with (quality is irrelevant here)."""
+    tasks = _tasks(dlrm_pool, 10, 4, 4, seed=11)
+    agent = DreamShard(tasks, CostSimulator(seed=0), DreamShardConfig(
+        n_iterations=1, n_collect=4, n_cost=20, n_batch=16, n_rl=2,
+        n_episode=4, inference_candidates=4))
+    agent.train()
+    return agent
+
+
+# ---- core properties --------------------------------------------------------
+
+
+@property_test(
+    lambda: dict(strategy=st.sampled_from(["lns", "evolution"]),
+                 n_tables=st.integers(4, 14),
+                 n_devices=st.sampled_from([2, 4]),
+                 task_seed=st.integers(0, 50), cfg_seed=st.integers(0, 50)),
+    grid=[dict(strategy=s, n_tables=m, n_devices=d, task_seed=ts, cfg_seed=cs)
+          for s in ("lns", "evolution")
+          for m, d, ts, cs in ((6, 2, 3, 0), (10, 4, 17, 5), (14, 4, 42, 9))],
+    max_examples=15)
+def test_refined_never_worse_than_seed(dlrm_pool, strategy, n_tables,
+                                       n_devices, task_seed, cfg_seed):
+    """Refined cost <= seed cost, for every strategy/task/seed combo."""
+    task = _tasks(dlrm_pool, n_tables, n_devices, 1, seed=task_seed)[0]
+    oracle = _oracle()
+    seed_placer = make_baseline_placers(oracle)["size_lookup"]
+    sp = SearchPlacer(oracle, seed_placer=seed_placer,
+                      config=SearchConfig(strategy=strategy, budget_ms=None,
+                                          max_evals=48, seed=cfg_seed))
+    refined = sp.place(task)
+    seed = seed_placer.place(task)
+    assert _cost(task, refined.assignment) <= \
+        _cost(task, seed.assignment)
+
+
+@property_test(
+    lambda: dict(strategy=st.sampled_from(["lns", "evolution"]),
+                 cfg_seed=st.integers(0, 50)),
+    grid=[dict(strategy=s, cfg_seed=cs)
+          for s in ("lns", "evolution") for cs in (0, 23)],
+    max_examples=10)
+def test_legality_preserved_under_tight_capacity(dlrm_pool, strategy,
+                                                 cfg_seed):
+    """When the seed is memory-legal on a near-full device budget, every
+    refinement stays legal -- search never trades feasibility for speed."""
+    raw = dlrm_pool[:8].copy()
+    raw[:, F.TABLE_SIZE_GB] = 5.0        # 40 GB on 4 x 11 GB: tight
+    task = Task.of(raw, 4)
+    oracle = _oracle()
+    sp = SearchPlacer(oracle,
+                      config=SearchConfig(strategy=strategy, budget_ms=None,
+                                          max_evals=64, seed=cfg_seed))
+    refined = sp.place(task)
+    sizes = np.bincount(refined.assignment, weights=raw[:, F.TABLE_SIZE_GB],
+                        minlength=4)
+    assert (sizes <= oracle.mem_capacity_gb).all()
+
+
+@property_test(
+    lambda: dict(strategy=st.sampled_from(["lns", "evolution"]),
+                 task_seed=st.integers(0, 30), cfg_seed=st.integers(0, 30)),
+    grid=[dict(strategy=s, task_seed=ts, cfg_seed=cs)
+          for s in ("lns", "evolution") for ts, cs in ((2, 0), (19, 7))],
+    max_examples=8)
+def test_anytime_monotonicity(dlrm_pool, strategy, task_seed, cfg_seed):
+    """A larger ``max_evals`` never worsens the refined cost: budgets are
+    nested (same rng stream, row-capped whole-round scoring), so the
+    bigger budget scores a superset of the smaller one's candidates."""
+    task = _tasks(dlrm_pool, 10, 4, 1, seed=task_seed)[0]
+    oracle = _oracle()
+    costs = []
+    for max_evals in (0, 4, 16, 64):
+        sp = SearchPlacer(oracle, config=SearchConfig(
+            strategy=strategy, budget_ms=None, max_evals=max_evals,
+            seed=cfg_seed))
+        costs.append(_cost(task, sp.place(task).assignment))
+    assert all(b <= a for a, b in zip(costs, costs[1:]))
+
+
+@property_test(
+    lambda: dict(n_tables=st.integers(4, 12), task_seed=st.integers(0, 50),
+                 zero=st.sampled_from(["budget_ms", "max_evals"])),
+    grid=[dict(n_tables=m, task_seed=ts, zero=z)
+          for z in ("budget_ms", "max_evals")
+          for m, ts in ((5, 1), (12, 31))],
+    max_examples=10)
+def test_zero_budget_returns_seed_bitwise(dlrm_pool, n_tables, task_seed,
+                                          zero):
+    """budget_ms=0 (or max_evals=0) returns the seed placement bitwise:
+    same assignment array and plan object, zero oracle evaluations."""
+    task = _tasks(dlrm_pool, n_tables, 4, 1, seed=task_seed)[0]
+    oracle = _oracle()
+    seed_placer = make_baseline_placers(oracle)["size"]
+    kw = ({"max_evals": 0, "budget_ms": None} if zero == "max_evals"
+          else {"budget_ms": 0.0})
+    sp = SearchPlacer(oracle, seed_placer=seed_placer,
+                      config=SearchConfig(**kw))
+    n0 = oracle.num_evaluations
+    refined = sp.place(task)
+    seed = seed_placer.place(task)
+    np.testing.assert_array_equal(refined.assignment, seed.assignment)
+    assert oracle.num_evaluations == n0
+    assert refined.strategy == sp.name
+
+
+def test_refine_is_deterministic(dlrm_pool):
+    """Same config seed -> identical refined assignment, run to run."""
+    task = _tasks(dlrm_pool, 12, 4, 1, seed=9)[0]
+    out = []
+    for _ in range(2):
+        sp = SearchPlacer(_oracle(), config=SearchConfig(
+            strategy="lns+evolution", budget_ms=None, max_evals=96, seed=3))
+        out.append(sp.place(task).assignment)
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+def test_single_device_returns_seed(dlrm_pool):
+    task = _tasks(dlrm_pool, 6, 1, 1, seed=0)[0]
+    oracle = _oracle()
+    sp = SearchPlacer(oracle, config=SearchConfig(budget_ms=None,
+                                                  max_evals=32))
+    assert (sp.place(task).assignment == 0).all()
+    assert oracle.num_evaluations == 0
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="unknown search strategy"):
+        SearchPlacer(_oracle(), config=SearchConfig(strategy="anneal"))
+    with pytest.raises(ValueError, match="beam"):
+        SearchPlacer(_oracle(), config=SearchConfig(strategy="beam"))
+
+
+# ---- beam search ------------------------------------------------------------
+
+
+def test_beam_refines_and_respects_budget(dlrm_pool, tiny_agent):
+    """Beam leaves never worsen the seed, and a beam+lns pipeline shares
+    one budget across both stages."""
+    tasks = _tasks(dlrm_pool, 10, 4, 3, seed=21)
+    oracle = _oracle()
+    ds = tiny_agent.as_placer()
+    for strategy in ("beam", "beam+lns"):
+        sp = SearchPlacer(oracle, seed_placer=ds, agent=tiny_agent,
+                          config=SearchConfig(strategy=strategy,
+                                              budget_ms=None, max_evals=32,
+                                              seed=1))
+        refined = sp.place_many(tasks)
+        seeds = ds.place_many(tasks)
+        for t, r, s in zip(tasks, refined, seeds):
+            assert _cost(t, r.assignment) <= \
+                _cost(t, s.assignment)
+            assert sp.last_scorer.evals <= 32
+
+
+# ---- scorer -----------------------------------------------------------------
+
+
+def test_scorer_caps_rows_and_dedups(dlrm_pool, rng):
+    task = _tasks(dlrm_pool, 8, 4, 1, seed=2)[0]
+    scorer = SearchScorer(_oracle(), task, max_evals=5)
+    A = rng.integers(0, 4, size=(8, 8))
+    kept = scorer.filter_new(A)
+    assert scorer.filter_new(kept).shape[0] == 0        # all seen now
+    costs, results = scorer.score(A)
+    assert np.isfinite(costs[:5]).all() and np.isinf(costs[5:]).all()
+    assert results[5] is None
+    assert scorer.evals == 5 and scorer.out_of_budget()
+    assert scorer.remaining_evals() == 0
+
+
+# ---- dispatch guards --------------------------------------------------------
+
+
+class _SpyOracle:
+    """Counts single vs batched oracle traffic (PR 4 guard pattern)."""
+
+    def __init__(self):
+        self.inner = SimOracle(CostSimulator(seed=0))
+        self.single_calls = 0
+        self.batched_calls = 0
+
+    @property
+    def mem_capacity_gb(self):
+        return self.inner.mem_capacity_gb
+
+    @property
+    def num_evaluations(self):
+        return self.inner.num_evaluations
+
+    def evaluate(self, raw, assignment, n_devices):
+        self.single_calls += 1
+        return self.inner.evaluate(raw, assignment, n_devices)
+
+    def evaluate_many(self, raw, assignments, n_devices):
+        self.batched_calls += 1
+        return self.inner.evaluate_many(raw, assignments, n_devices)
+
+    def legal_batch(self, raw, assignments, n_devices):
+        return self.inner.legal_batch(raw, assignments, n_devices)
+
+
+def test_search_never_calls_single_evaluate(dlrm_pool):
+    """The whole search path is batched: one evaluate_many per scored
+    round, zero per-candidate evaluate calls."""
+    task = _tasks(dlrm_pool, 10, 4, 1, seed=5)[0]
+    spy = _SpyOracle()
+    sp = SearchPlacer(spy, config=SearchConfig(strategy="lns+evolution",
+                                               budget_ms=None, max_evals=128,
+                                               seed=0))
+    sp.place(task)
+    assert spy.single_calls == 0
+    assert 1 <= spy.batched_calls == sp.last_scorer.batches
+
+
+def test_random_placer_candidates_batched(dlrm_pool):
+    """RandomPlacer's candidate scoring is one evaluate_many, not a
+    per-candidate loop."""
+    task = _tasks(dlrm_pool, 10, 4, 1, seed=6)[0]
+    spy = _SpyOracle()
+    p = RandomPlacer(spy, seed=0, n_candidates=8)
+    placement = p.place(task)
+    assert spy.single_calls == 0 and spy.batched_calls == 1
+    assert placement.candidates == 8 and placement.oracle_evals == 8
+    # the winner is the measured argmin over the 8 draws
+    ref = RandomPlacer(SimOracle(CostSimulator(seed=0)), seed=0)
+    draws = [ref.place(task).assignment for _ in range(8)]
+    best = min(draws, key=lambda a: _cost(task, a))
+    np.testing.assert_array_equal(placement.assignment, best)
+
+
+def test_portfolio_placer_batched_and_optimal(dlrm_pool):
+    """PortfolioPlacer scores all member proposals in one batch per task
+    and returns the measured-best expert."""
+    tasks = _tasks(dlrm_pool, 10, 4, 3, seed=7)
+    spy = _SpyOracle()
+    placers = make_baseline_placers(spy, include_portfolio=True)
+    out = placers["expert_best"].place_many(tasks)
+    assert spy.single_calls == 0
+    assert spy.batched_calls == len(tasks)
+    experts = ("size", "dim", "lookup", "size_lookup")
+    for t, p in zip(tasks, out):
+        best = min(
+            (placers[s].place(t).assignment for s in experts),
+            key=lambda a: _cost(t, a))
+        assert _cost(t, p.assignment) == _cost(t, best)
+
+
+def test_rnn_training_rewards_batched(dlrm_pool):
+    """The RNN baseline's per-episode reward loop is gone: one
+    evaluate_many per update step."""
+    from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig
+    tasks = _tasks(dlrm_pool, 8, 2, 2, seed=8)
+    spy = _SpyOracle()
+    rnn = RNNPlacer(tasks, spy, RNNPolicyConfig(n_updates=3, n_episode=4))
+    rnn.train()
+    assert spy.single_calls == 0
+    assert spy.batched_calls == 3
+    assert spy.num_evaluations == 3 * 4
+
+
+# ---- session integration ----------------------------------------------------
+
+
+def test_session_refiner_pass(dlrm_pool, tiny_agent):
+    """A session with a refiner serves RL+search placements: never worse
+    than the raw decode, same task order, refiner provenance."""
+    tasks = _tasks(dlrm_pool, 10, 4, 4, seed=13)
+    oracle = _oracle()
+    refiner = SearchPlacer(oracle, config=SearchConfig(
+        strategy="lns", budget_ms=None, max_evals=32, seed=0))
+    plain = PlacementSession(tiny_agent).place_many(tasks)
+    refined = PlacementSession(tiny_agent, refiner=refiner).place_many(tasks)
+    for t, p, r in zip(tasks, plain, refined):
+        assert _cost(t, r.assignment) <= _cost(t, p.assignment)
+        assert r.strategy == refiner.name
+
+
+def test_cached_oracle_batch_counters(dlrm_pool, rng):
+    """CachedOracle splits out per-evaluate_many hit/miss accounting."""
+    raw = dlrm_pool[:8]
+    oracle = CachedOracle(CostSimulator(seed=0))
+    A = rng.integers(0, 4, size=(6, 8))
+    oracle.evaluate_many(raw, A, 4)
+    oracle.evaluate_many(raw, A, 4)
+    oracle.evaluate(raw, A[0], 4)              # single path: not batched
+    info = oracle.info()
+    assert info["batched_calls"] == 2
+    assert info["batched_hits"] == 6 and info["batched_misses"] == 6
+    assert info["batched_hit_rate"] == 0.5
+    assert info["hits"] == 7                   # includes the single hit
+    assert oracle.last_batch == {"rows": 6, "hits": 6, "misses": 0}
+
+
+def test_search_cache_locality(dlrm_pool):
+    """Re-refining the same task with the same seed through a CachedOracle
+    is served almost entirely from cache (the b9 hit-rate story)."""
+    task = _tasks(dlrm_pool, 10, 4, 1, seed=4)[0]
+    oracle = CachedOracle(CostSimulator(seed=0))
+    for _ in range(2):
+        sp = SearchPlacer(oracle, config=SearchConfig(
+            strategy="lns", budget_ms=None, max_evals=64, seed=0))
+        sp.place(task)
+    info = oracle.info()
+    assert info["batched_hit_rate"] >= 0.45    # second run all hits
+    assert sp.last_scorer.hardware_evals == 0  # no new hardware measurements
