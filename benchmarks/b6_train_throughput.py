@@ -194,6 +194,11 @@ if __name__ == "__main__":
                     help="comma-separated regime subset (e.g. 'scale'; CI "
                          "runs the full-config scale regime so the bench "
                          "gate can compare against the committed baseline)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and export a trace on exit "
+                         "(.jsonl -> event log, else Chrome trace JSON)")
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out, repeats=max(1, args.repeats),
-        regimes=args.regimes.split(",") if args.regimes else None)
+    from repro import telemetry as tele
+    with tele.trace_to(args.trace):
+        run(smoke=args.smoke, out=args.out, repeats=max(1, args.repeats),
+            regimes=args.regimes.split(",") if args.regimes else None)

@@ -125,10 +125,11 @@ def _cache_leg(sim, agent, tasks) -> dict:
         n0 = cached.num_evaluations
         sp.place_many(tasks)
         hardware.append(cached.num_evaluations - n0)
-    info = cached.info()
+    batch_total = cached.batch_hits + cached.batch_misses
     return {
-        "batched_calls": info["batched_calls"],
-        "batched_hit_rate": round(info["batched_hit_rate"], 4),
+        "batched_calls": cached.batched_calls,
+        "batched_hit_rate": round(
+            cached.batch_hits / batch_total if batch_total else 0.0, 4),
         "hardware_evals_pass1": hardware[0],
         "hardware_evals_pass2": hardware[1],
     }
@@ -223,6 +224,11 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None, help="output JSON path")
     ap.add_argument("--regimes", default=None,
                     help="comma-separated regime subset (quick, paper)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and export a trace on exit "
+                         "(.jsonl -> event log, else Chrome trace JSON)")
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out,
-        regimes=args.regimes.split(",") if args.regimes else None)
+    from repro import telemetry as tele
+    with tele.trace_to(args.trace):
+        run(smoke=args.smoke, out=args.out,
+            regimes=args.regimes.split(",") if args.regimes else None)

@@ -199,11 +199,41 @@ def check_search(gate: Gate, baseline: dict, fresh: dict) -> None:
                 )
 
 
+def check_telemetry(gate: Gate, baseline: dict, fresh: dict) -> None:
+    """b10: the telemetry overhead bounds are absolute invariants on the
+    FRESH run (host-independent by design -- both are relative
+    percentages), re-proven every CI leg; the committed baseline only
+    pins the limits themselves."""
+    limits = fresh.get("limits", {})
+    off_limit = limits.get("offpath_pct", 1.0)
+    on_limit = limits.get("enabled_pct", 5.0)
+    for name, reg in fresh.get("regimes", {}).items():
+        gate.invariant(
+            f"b10.{name}.offpath_under_{off_limit}pct",
+            reg["offpath_overhead_pct"] < off_limit,
+            f"disabled-path overhead {reg['offpath_overhead_pct']}% "
+            f"(limit {off_limit}%)",
+        )
+        gate.invariant(
+            f"b10.{name}.enabled_under_{on_limit}pct",
+            reg["enabled_overhead_pct"] < on_limit,
+            f"enabled overhead {reg['enabled_overhead_pct']}% "
+            f"(limit {on_limit}%)",
+        )
+    gate.invariant(
+        "b10.limits_match_baseline",
+        baseline.get("limits") == fresh.get("limits"),
+        f"baseline limits {baseline.get('limits')} vs fresh "
+        f"{fresh.get('limits')}",
+    )
+
+
 CHECKERS = {
     "b6_train_throughput": check_train,
     "b7_oracle_throughput": check_oracle,
     "b8_fusion_model": check_fusion,
     "b9_search": check_search,
+    "b10_telemetry_overhead": check_telemetry,
 }
 
 

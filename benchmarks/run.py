@@ -31,6 +31,7 @@ MODULES = [
     "b7_oracle_throughput",   # batched evaluate_many vs per-placement loop
     "b8_fusion_model",        # fusion-aware vs additive multi-table costs
     "b9_search",              # search-augmented placement anytime curves
+    "b10_telemetry_overhead",  # telemetry off-path / enabled overhead bounds
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]
@@ -40,27 +41,35 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="bench_results.json")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and export a trace on exit "
+                         "(.jsonl -> event log, else Chrome trace JSON "
+                         "for chrome://tracing)")
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
 
+    from repro import telemetry as tele
+
     all_rows = {}
-    print("name,us_per_call,derived")
-    for name in mods:
-        t0 = time.perf_counter()
-        try:
-            mod = importlib.import_module(f"benchmarks.{name}")
-            rows = mod.run()
-            status = "ok"
-        except Exception as e:
-            rows = [{"error": f"{type(e).__name__}: {e}"}]
-            traceback.print_exc()
-            status = "error"
-        dt = time.perf_counter() - t0
-        all_rows[name] = {"status": status, "seconds": round(dt, 1),
-                          "rows": rows}
-        print(f"{name},{dt * 1e6 / max(len(rows), 1):.0f},"
-              f"status={status} rows={len(rows)} wall={dt:.1f}s",
-              flush=True)
+    with tele.trace_to(args.trace):
+        print("name,us_per_call,derived")
+        for name in mods:
+            t0 = time.perf_counter()
+            try:
+                with tele.span("bench.module", module=name):
+                    mod = importlib.import_module(f"benchmarks.{name}")
+                    rows = mod.run()
+                status = "ok"
+            except Exception as e:
+                rows = [{"error": f"{type(e).__name__}: {e}"}]
+                traceback.print_exc()
+                status = "error"
+            dt = time.perf_counter() - t0
+            all_rows[name] = {"status": status, "seconds": round(dt, 1),
+                              "rows": rows}
+            print(f"{name},{dt * 1e6 / max(len(rows), 1):.0f},"
+                  f"status={status} rows={len(rows)} wall={dt:.1f}s",
+                  flush=True)
     json.dump(all_rows, open(args.out, "w"), indent=1, default=str)
     print(f"results -> {args.out}")
 

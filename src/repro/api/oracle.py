@@ -26,10 +26,12 @@ adapter accept either a ``CostOracle`` or a bare ``CostSimulator``
 from __future__ import annotations
 
 import os
+import warnings
 from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro import telemetry as tele
 from repro.core import features as F
 from repro.sim.costsim import (CostSimulator, SimResult, assignments_legal,
                                check_assignment_batch, per_device_sums,
@@ -108,7 +110,13 @@ def legal_batch(oracle, raw: np.ndarray, assignments: np.ndarray,
 
 
 class SimOracle:
-    """``CostOracle`` view over the analytic ``CostSimulator``."""
+    """``CostOracle`` view over the analytic ``CostSimulator``.
+
+    Each call emits a telemetry span (``oracle.sim.evaluate[_many]``
+    with P/M/n_devices attributes) and bumps the dispatch counters the
+    batched-path regression tests assert on -- all no-ops until
+    ``repro.telemetry.enable()``.
+    """
 
     def __init__(self, sim: CostSimulator | None = None, **sim_kwargs):
         self.sim = sim if sim is not None else CostSimulator(**sim_kwargs)
@@ -122,10 +130,18 @@ class SimOracle:
         return self.sim.num_evaluations
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
-        return self.sim.evaluate(raw, assignment, n_devices)
+        tele.count("oracle.sim.evaluate_calls")
+        with tele.span("oracle.sim.evaluate", M=len(raw),
+                       n_devices=n_devices):
+            return self.sim.evaluate(raw, assignment, n_devices)
 
     def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
-        return self.sim.evaluate_batch(raw, assignments, n_devices)
+        P = len(assignments)
+        tele.count("oracle.sim.evaluate_many_calls")
+        tele.count("oracle.sim.rows", P)
+        with tele.span("oracle.sim.evaluate_many", P=P, M=len(raw),
+                       n_devices=n_devices):
+            return self.sim.evaluate_batch(raw, assignments, n_devices)
 
     def legal(self, raw, assignment, n_devices) -> bool:
         return self.sim.legal(raw, assignment, n_devices)
@@ -155,6 +171,7 @@ class CachedOracle:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         # per-evaluate_many accounting: search workloads hammer the cache
         # with near-duplicate batches, and these make that locality
         # visible (b9 reports the batched hit-rate per budget point)
@@ -196,6 +213,8 @@ class CachedOracle:
     def _store(self, key: bytes, res: SimResult):
         if len(self._cache) >= self.max_entries:      # evict least-recent
             self._cache.pop(next(iter(self._cache)))
+            self.evictions += 1
+            tele.count("oracle.cache.evictions")
         self._cache[key] = res
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
@@ -203,11 +222,15 @@ class CachedOracle:
         hit = self._cache.get(key)
         if hit is not None:
             self.hits += 1
+            tele.count("oracle.cache.hits")
             del self._cache[key]                      # LRU: move to end
             self._cache[key] = hit
             return hit
         self.misses += 1
-        res = self.inner.evaluate(raw, assignment, n_devices)
+        tele.count("oracle.cache.misses")
+        with tele.span("oracle.cache.evaluate", M=len(raw),
+                       n_devices=n_devices):
+            res = self.inner.evaluate(raw, assignment, n_devices)
         self._store(key, res)
         return res
 
@@ -219,6 +242,13 @@ class CachedOracle:
         ``evaluate`` would do, since the first occurrence populates the
         cache.  Results follow input row order."""
         assignments = check_assignment_batch(assignments, n_devices)
+        sp = tele.span("oracle.cache.evaluate_many",
+                       P=len(assignments), M=len(raw), n_devices=n_devices)
+        with sp:
+            return self._evaluate_many_impl(raw, assignments, n_devices,
+                                              sp)
+
+    def _evaluate_many_impl(self, raw, assignments, n_devices, sp):
         keys = self._keys_batch(raw, assignments, n_devices)
         hits0, misses0 = self.hits, self.misses
         out: list[SimResult | None] = [None] * len(keys)
@@ -250,6 +280,10 @@ class CachedOracle:
         self.batch_misses += self.misses - misses0
         self.last_batch = {"rows": len(keys), "hits": self.hits - hits0,
                            "misses": self.misses - misses0}
+        tele.count("oracle.cache.evaluate_many_calls")
+        tele.count("oracle.cache.hits", self.hits - hits0)
+        tele.count("oracle.cache.misses", self.misses - misses0)
+        sp.set(hits=self.hits - hits0, misses=self.misses - misses0)
         return out
 
     def legal(self, raw, assignment, n_devices) -> bool:
@@ -263,10 +297,24 @@ class CachedOracle:
         """Cache behaviour snapshot (hit rate, occupancy, policy), with
         the batched-path split: ``batched_*`` counts only rows that went
         through ``evaluate_many`` (``batched_hit_rate`` is the number a
-        search workload cares about -- its scoring path is all batched)."""
+        search workload cares about -- its scoring path is all batched).
+
+        .. deprecated::
+            Prefer ``repro.telemetry.snapshot()`` -- enable telemetry
+            and read the ``oracle.cache.*`` counters, which cover every
+            cache instance in the process.  ``info()`` remains for
+            per-instance inspection but will go away once its callers
+            migrate.
+        """
+        warnings.warn(
+            "CachedOracle.info() is deprecated; enable repro.telemetry "
+            "and read the oracle.cache.* counters via "
+            "repro.telemetry.snapshot() instead",
+            DeprecationWarning, stacklevel=2)
         total = self.hits + self.misses
         btotal = self.batch_hits + self.batch_misses
         return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
                 "entries": len(self._cache), "max_entries": self.max_entries,
                 "hit_rate": self.hits / total if total else 0.0,
                 "batched_calls": self.batched_calls,
@@ -371,8 +419,11 @@ class MeasuredOracle:
         return fwd[inverse], bwd[inverse]
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
-        return self.evaluate_many(
-            raw, np.asarray(assignment)[None, :], n_devices)[0]
+        tele.count("oracle.measured.evaluate_calls")
+        with tele.span("oracle.measured.evaluate", M=len(raw),
+                       n_devices=n_devices):
+            return self._evaluate_many_impl(
+                raw, np.asarray(assignment)[None, :], n_devices)[0]
 
     def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
         """All P placements in one pass: per-table kernel costs interpolate
@@ -380,6 +431,15 @@ class MeasuredOracle:
         tables are fused through the ``FusionModel`` (rank sort + segment
         sums over the ``(P, M)`` assignment matrix), and the alpha-beta
         comm model prices the whole ``(P, D)`` payload grid."""
+        P = len(assignments)
+        tele.count("oracle.measured.evaluate_many_calls")
+        tele.count("oracle.measured.rows", P)
+        with tele.span("oracle.measured.evaluate_many", P=P, M=len(raw),
+                       n_devices=n_devices):
+            return self._evaluate_many_impl(raw, assignments, n_devices)
+
+    def _evaluate_many_impl(self, raw, assignments,
+                            n_devices) -> list[SimResult]:
         raw = np.asarray(raw, dtype=np.float64)
         assignments = check_assignment_batch(assignments, n_devices)
         P, _ = assignments.shape
@@ -485,11 +545,15 @@ class KernelOracle:
                 grid = self._calibration_grid()
                 # small fused sweep: enough to fit the launch-overhead
                 # amortization without stretching the lazy first call
-                table = CalibrationTable.measure(
-                    **grid, use_pallas=self.use_pallas,
-                    warmup=1, repeats=self.repeats, seed=self.seed,
-                    spec=self.spec, comm=CommModel.from_spec(self.spec),
-                    fused_ks=(2, 4), fused_per_k=3)
+                tele.count("oracle.kernel.calibrations")
+                with tele.span("oracle.kernel.calibrate",
+                               use_pallas=self.use_pallas,
+                               dims=len(grid["dims"])):
+                    table = CalibrationTable.measure(
+                        **grid, use_pallas=self.use_pallas,
+                        warmup=1, repeats=self.repeats, seed=self.seed,
+                        spec=self.spec, comm=CommModel.from_spec(self.spec),
+                        fused_ks=(2, 4), fused_per_k=3)
                 batch = grid["batches"][0]
             elif isinstance(table, (str, os.PathLike)):
                 table = CalibrationTable.load(os.fspath(table))
@@ -509,10 +573,18 @@ class KernelOracle:
             self._measured.num_evaluations
 
     def evaluate(self, raw, assignment, n_devices) -> SimResult:
-        return self.measured().evaluate(raw, assignment, n_devices)
+        tele.count("oracle.kernel.evaluate_calls")
+        with tele.span("oracle.kernel.evaluate", M=len(raw),
+                       n_devices=n_devices):
+            return self.measured().evaluate(raw, assignment, n_devices)
 
     def evaluate_many(self, raw, assignments, n_devices) -> list[SimResult]:
-        return self.measured().evaluate_many(raw, assignments, n_devices)
+        P = len(assignments)
+        tele.count("oracle.kernel.evaluate_many_calls")
+        tele.count("oracle.kernel.rows", P)
+        with tele.span("oracle.kernel.evaluate_many", P=P, M=len(raw),
+                       n_devices=n_devices):
+            return self.measured().evaluate_many(raw, assignments, n_devices)
 
     def legal(self, raw, assignment, n_devices) -> bool:
         return bool(self.legal_batch(

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tele
 from repro.api.placement import Placement, measure_placements
 from repro.core import features as FEAT
 from repro.core import rollout as R
@@ -117,6 +118,8 @@ class PlacementSession:
         fn = self._decode_fns.get(key)
         if fn is None:
             self.num_compiles += 1
+            tele.count("session.bucket_compiles")
+            tele.count("jit.retraces")
             decode = functools.partial(
                 R.decode_candidates, n_devices=n_devices,
                 n_candidates=self.n_candidates,
@@ -155,12 +158,25 @@ class PlacementSession:
                 entries.append((f[order], s[order]))
                 orders.append(order)
             feats, sizes, tmask = pad_feature_batch(entries, m_pad, b_pad)
+            c0 = self.num_compiles
             fn = self._decode_fn(m_pad, n_devices, b_pad)
-            actions, est = fn(self.agent.policy_params,
-                              self.agent.cost_params, jnp.asarray(feats),
-                              jnp.asarray(sizes), jnp.asarray(tmask),
-                              self.agent.oracle.mem_capacity_gb)
+            fresh = self.num_compiles > c0
+            args = (self.agent.policy_params, self.agent.cost_params,
+                    jnp.asarray(feats), jnp.asarray(sizes),
+                    jnp.asarray(tmask), self.agent.oracle.mem_capacity_gb)
+            with tele.span("session.decode", m_pad=m_pad,
+                           n_devices=n_devices, tasks=B, b_pad=b_pad,
+                           fresh_compile=fresh):
+                if fresh:
+                    # jit compiles lazily: a fresh fn pays its XLA trace
+                    # inside this first invocation
+                    with tele.span("session.compile", m_pad=m_pad,
+                                   n_devices=n_devices, b_pad=b_pad):
+                        actions, est = fn(*args)
+                else:
+                    actions, est = fn(*args)
             self.num_decode_calls += 1
+            tele.count("session.decode_calls")
             actions, est = np.asarray(actions), np.asarray(est)
             for j, i in enumerate(idxs):
                 t, order = tasks[i], orders[j]

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tele
 from repro.api.oracle import (CostOracle, SimOracle, ensure_oracle,
                               evaluate_many, legal_batch)
 from repro.api.session import pad_device_mask, pad_feature_batch
@@ -389,6 +390,7 @@ class DreamShard:
             # (and retraces -- each ring shape is a fresh trace of the
             # fused update) O(log n) times instead of at every step
             cap = max(cap, 2 * self._ring.capacity)
+        tele.count("jit.retraces")
         self._ring = RB.ReplayBuffer(cap, self._m_pad, self._d_pad)
         self._ring_host = self._host_sig()
         if n:
@@ -440,6 +442,7 @@ class DreamShard:
     def _rl_update_fn(self, n_devices: int):
         key = (n_devices, self.cfg.n_episode)
         if key not in self._rl_updates:
+            tele.count("jit.retraces")
             self._rl_updates[key] = R.make_rl_update(
                 self._rl_opt, n_devices=n_devices,
                 n_episodes=self.cfg.n_episode,
@@ -499,9 +502,14 @@ class DreamShard:
         for it in range(self.cfg.n_iterations):
             t0 = time.perf_counter()
             d0 = self.num_dispatches
-            self.collect()
-            cost_loss = self.update_cost()
-            mean_reward = self.update_policy()
+            with tele.span("train.iteration", iteration=it) as sp:
+                with tele.span("train.collect", iteration=it):
+                    self.collect()
+                with tele.span("train.cost_update", iteration=it):
+                    cost_loss = self.update_cost()
+                with tele.span("train.rl_update", iteration=it):
+                    mean_reward = self.update_policy()
+                sp.set(cost_loss=cost_loss, mean_est_reward=mean_reward)
             entry = {"iteration": it, "cost_loss": cost_loss,
                      "mean_est_reward": mean_reward,
                      "wall_s": time.perf_counter() - t0,

@@ -59,6 +59,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--force", action="store_true",
                     help="re-measure even if a matching artifact exists")
     ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry during the sweep and export a "
+                         "trace on exit (.jsonl -> event log, else Chrome "
+                         "trace JSON)")
     return ap
 
 
@@ -94,6 +98,12 @@ def _up_to_date(path: str, grid: dict, fused_cfg: tuple | None) -> bool:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    from repro import telemetry as tele
+    with tele.trace_to(args.trace, quiet=args.quiet):
+        return _main_impl(args)
+
+
+def _main_impl(args) -> int:
     from repro.profiling.calibration import (CALIBRATION_VERSION,
                                              CalibrationTable,
                                              DEFAULT_FUSED_KS,
@@ -151,12 +161,14 @@ def main(argv=None) -> int:
                   f"fwd={pt.fwd_ms:.4f}ms bwd={pt.bwd_ms:.4f}ms", flush=True)
 
     t0 = time.perf_counter()
-    table = CalibrationTable.measure(
-        **grid, use_pallas=use_pallas, warmup=args.warmup, repeats=repeats,
-        seed=args.seed, fused=not args.no_fused, fused_ks=fused_ks,
-        fused_per_k=fused_per_k,
-        progress=None if args.quiet else _progress,
-        meta={"cli": True, "smoke": bool(args.smoke)})
+    from repro import telemetry as tele
+    with tele.span("calibrate.sweep", shapes=n_shapes, repeats=repeats):
+        table = CalibrationTable.measure(
+            **grid, use_pallas=use_pallas, warmup=args.warmup,
+            repeats=repeats, seed=args.seed, fused=not args.no_fused,
+            fused_ks=fused_ks, fused_per_k=fused_per_k,
+            progress=None if args.quiet else _progress,
+            meta={"cli": True, "smoke": bool(args.smoke)})
     path = table.save(args.out)
     say(f"[calibrate] {table.summary()}")
     if not args.no_fused:

@@ -16,6 +16,7 @@ from typing import Iterable
 
 import numpy as np
 
+from repro import telemetry as tele
 from repro.api.oracle import ensure_oracle
 from repro.api.placement import BasePlacer, Placement, Placer
 from repro.core.baselines import expert_place
@@ -112,6 +113,18 @@ class SearchPlacer(BasePlacer):
         the seed comes back bitwise (same assignment and plan objects),
         relabeled with this placer's name.
         """
+        sp = tele.span("search.refine", strategy=self.config.strategy,
+                       M=len(task.raw_features),
+                       n_devices=task.n_devices)
+        with sp:
+            out = self._refine_impl(task, placement)
+            if self.last_scorer is not None:
+                sp.set(cost_ms=out.est_cost_ms,
+                       evals=self.last_scorer.evals,
+                       hardware_evals=self.last_scorer.hardware_evals)
+            return out
+
+    def _refine_impl(self, task: Task, placement: Placement) -> Placement:
         cfg = self.config
         a0 = np.asarray(placement.assignment, dtype=np.int64)
         scorer = SearchScorer(self.oracle, task, budget_ms=cfg.budget_ms,

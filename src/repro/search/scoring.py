@@ -33,6 +33,7 @@ import time
 
 import numpy as np
 
+from repro import telemetry as tele
 from repro.api.oracle import ensure_oracle, evaluate_many, legal_batch
 from repro.data.tasks import Task
 
@@ -52,7 +53,7 @@ class SearchScorer:
                           else time.perf_counter() + budget_ms / 1e3)
         self.evals = 0            # candidate rows sent to the oracle
         self.batches = 0          # evaluate_many calls issued
-        self._evals0 = self.oracle.num_evaluations
+        self._hardware_evals = 0  # inner-oracle measurements, this scorer
         self._seen: set[bytes] = set()
 
     # ---- budget -------------------------------------------------------------
@@ -72,12 +73,26 @@ class SearchScorer:
             return None
         return max(0, self.max_evals - self.evals)
 
+    def remaining_ms(self) -> float | None:
+        """Wall-clock headroom before the deadline (``None`` =
+        undeadlined; clamped at 0 once past it)."""
+        if self._deadline is None:
+            return None
+        return max(0.0, (self._deadline - time.perf_counter()) * 1e3)
+
     @property
     def hardware_evals(self) -> int:
-        """Measurements the oracle actually performed for this scorer --
+        """Measurements the oracle actually performed *for this scorer* --
         under a ``CachedOracle`` this is the miss count, i.e. how much of
-        the row budget the cache absorbed."""
-        return self.oracle.num_evaluations - self._evals0
+        the row budget the cache absorbed.
+
+        Accumulated per ``score()`` call (delta of the oracle's
+        ``num_evaluations`` across the batched pass), NOT as one delta
+        since construction -- a shared oracle may serve other traffic
+        (e.g. a benchmark's baseline sweep between searches), and that
+        must not be billed to this scorer.
+        """
+        return self._hardware_evals
 
     # ---- candidate filtering ------------------------------------------------
 
@@ -118,9 +133,16 @@ class SearchScorer:
             min(P, max(0, self.max_evals - self.evals))
         if cap == 0:
             return costs, results
-        res = evaluate_many(self.oracle, self.raw, A[:cap], self.n_devices)
+        hw0 = self.oracle.num_evaluations
+        with tele.span("search.score", rows=cap,
+                       n_devices=self.n_devices) as sp:
+            res = evaluate_many(self.oracle, self.raw, A[:cap],
+                                self.n_devices)
+            sp.set(hardware_evals=self.oracle.num_evaluations - hw0)
+        self._hardware_evals += self.oracle.num_evaluations - hw0
         self.evals += cap
         self.batches += 1
+        tele.count("search.scored_rows", cap)
         for i, r in enumerate(res):
             costs[i] = r.overall
             results[i] = r

@@ -31,6 +31,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import telemetry as tele
 from repro.search.scoring import SearchScorer
 
 # consecutive rounds allowed to produce zero new admissible candidates
@@ -149,16 +150,22 @@ def refine_lns(scorer: SearchScorer, rng, cfg, incumbent: Incumbent,
         if cfg.max_rounds is not None and rounds >= cfg.max_rounds:
             break
         rounds += 1
-        A = _lns_neighborhood(incumbent, rng, cfg.neighborhood,
-                              cfg.swap_fraction, scorer.n_devices)
-        incumbent.proposed += A.shape[0]
-        A = _admissible(scorer, A, enforce_legal)
-        if A.shape[0] == 0:
-            stall += 1
-            continue
-        stall = 0
-        costs, results = scorer.score(A)
-        incumbent.consider(A, costs, results)
+        with tele.span("search.round", strategy="lns",
+                       round=rounds) as sp:
+            A = _lns_neighborhood(incumbent, rng, cfg.neighborhood,
+                                  cfg.swap_fraction, scorer.n_devices)
+            incumbent.proposed += A.shape[0]
+            A = _admissible(scorer, A, enforce_legal)
+            if A.shape[0] == 0:
+                stall += 1
+                sp.set(stalled=True)
+                continue
+            stall = 0
+            costs, results = scorer.score(A)
+            incumbent.consider(A, costs, results)
+            sp.set(incumbent_ms=incumbent.cost,
+                   remaining_evals=scorer.remaining_evals(),
+                   remaining_ms=scorer.remaining_ms())
     return incumbent
 
 
@@ -225,20 +232,28 @@ def refine_evolution(scorer: SearchScorer, rng, cfg,
         if cfg.max_rounds is not None and rounds >= cfg.max_rounds:
             break
         rounds += 1
-        costs = np.asarray(pop_c)
-        order = np.argsort(costs, kind="stable")
-        elites = np.stack([pop_a[i] for i in order[:max(1, cfg.elites)]])
-        children = []
-        for _ in range(cfg.population):
-            if elites.shape[0] >= 2 and rng.random() < cfg.crossover_rate:
-                child = _crossover_vote(elites, rng, D)
+        with tele.span("search.round", strategy="evolution",
+                       round=rounds) as sp:
+            costs = np.asarray(pop_c)
+            order = np.argsort(costs, kind="stable")
+            elites = np.stack([pop_a[i]
+                               for i in order[:max(1, cfg.elites)]])
+            children = []
+            for _ in range(cfg.population):
+                if elites.shape[0] >= 2 and \
+                        rng.random() < cfg.crossover_rate:
+                    child = _crossover_vote(elites, rng, D)
+                else:
+                    child = pop_a[_tournament(rng, costs, cfg.tournament)]
+                children.append(_mutate(child, rng, cfg.mutations, D))
+            if not admit(np.stack(children)):
+                stall += 1
+                sp.set(stalled=True)
             else:
-                child = pop_a[_tournament(rng, costs, cfg.tournament)]
-            children.append(_mutate(child, rng, cfg.mutations, D))
-        if not admit(np.stack(children)):
-            stall += 1
-        else:
-            stall = 0
+                stall = 0
+            sp.set(incumbent_ms=incumbent.cost,
+                   remaining_evals=scorer.remaining_evals(),
+                   remaining_ms=scorer.remaining_ms())
     return incumbent
 
 
@@ -254,6 +269,7 @@ def _beam_score_fn(reward_mode: str, log_targets: bool):
     key = (reward_mode, log_targets)
     fn = _BEAM_SCORE_FNS.get(key)
     if fn is None:
+        tele.count("jit.retraces")
         import jax
 
         from repro.core import rollout as R
@@ -306,39 +322,41 @@ def refine_beam(scorer: SearchScorer, rng, cfg, incumbent: Incumbent,
     leaf_est = np.full(W, np.inf)
 
     rows = np.arange(W)
-    for t in range(M):
-        legal = (mem + sizes_s[t]) <= cap                    # (W, D)
-        none_legal = ~legal.any(axis=1)
-        legal[none_legal] = True                # rollout's fallback rule
-        # symmetry breaking: empty devices are interchangeable, so only
-        # the lowest-indexed one may be opened by this table
-        empty = ~used
-        first_empty = np.argmax(empty, axis=1)
-        allowed = used.copy()
-        has_empty = empty.any(axis=1)
-        allowed[rows[has_empty], first_empty[has_empty]] = True
-        legal &= allowed
+    with tele.span("search.beam_expand", W=W, M=M, n_devices=D):
+        for t in range(M):
+            legal = (mem + sizes_s[t]) <= cap                # (W, D)
+            none_legal = ~legal.any(axis=1)
+            legal[none_legal] = True            # rollout's fallback rule
+            # symmetry breaking: empty devices are interchangeable, so
+            # only the lowest-indexed one may be opened by this table
+            empty = ~used
+            first_empty = np.argmax(empty, axis=1)
+            allowed = used.copy()
+            has_empty = empty.any(axis=1)
+            allowed[rows[has_empty], first_empty[has_empty]] = True
+            legal &= allowed
 
-        cand = np.repeat(dev[:, None], D, axis=1)            # (W, D, D, H)
-        cand[:, np.arange(D), np.arange(D), :] += h[t]
-        est = np.asarray(score_fn(agent.cost_params,
-                                  jnp.asarray(cand.reshape(W * D, D, H))))
-        est = est.reshape(W, D).astype(np.float64)
-        est[~legal] = np.inf
-        est[~alive] = np.inf
-        sel = np.argsort(est, axis=None, kind="stable")[:W]
-        w_idx, d_idx = np.unravel_index(sel, (W, D))
+            cand = np.repeat(dev[:, None], D, axis=1)        # (W, D, D, H)
+            cand[:, np.arange(D), np.arange(D), :] += h[t]
+            est = np.asarray(score_fn(
+                agent.cost_params,
+                jnp.asarray(cand.reshape(W * D, D, H))))
+            est = est.reshape(W, D).astype(np.float64)
+            est[~legal] = np.inf
+            est[~alive] = np.inf
+            sel = np.argsort(est, axis=None, kind="stable")[:W]
+            w_idx, d_idx = np.unravel_index(sel, (W, D))
 
-        leaf_est = est[w_idx, d_idx]
-        new_alive = np.isfinite(leaf_est)
-        assign = assign[w_idx]
-        assign[new_alive, t] = d_idx[new_alive]
-        dev = cand[w_idx, d_idx]
-        mem = mem[w_idx]
-        mem[new_alive, d_idx[new_alive]] += sizes_s[t]
-        used = used[w_idx]
-        used[new_alive, d_idx[new_alive]] = True
-        alive = new_alive
+            leaf_est = est[w_idx, d_idx]
+            new_alive = np.isfinite(leaf_est)
+            assign = assign[w_idx]
+            assign[new_alive, t] = d_idx[new_alive]
+            dev = cand[w_idx, d_idx]
+            mem = mem[w_idx]
+            mem[new_alive, d_idx[new_alive]] += sizes_s[t]
+            used = used[w_idx]
+            used[new_alive, d_idx[new_alive]] = True
+            alive = new_alive
 
     if not alive.any():
         return incumbent
@@ -349,6 +367,11 @@ def refine_beam(scorer: SearchScorer, rng, cfg, incumbent: Incumbent,
     incumbent.proposed += leaves.shape[0]
     leaves = _admissible(scorer, leaves, enforce_legal)
     if leaves.shape[0] and not scorer.out_of_budget():
-        costs, results = scorer.score(leaves)
-        incumbent.consider(leaves, costs, results)
+        with tele.span("search.round", strategy="beam",
+                       leaves=int(leaves.shape[0])) as sp:
+            costs, results = scorer.score(leaves)
+            incumbent.consider(leaves, costs, results)
+            sp.set(incumbent_ms=incumbent.cost,
+                   remaining_evals=scorer.remaining_evals(),
+                   remaining_ms=scorer.remaining_ms())
     return incumbent

@@ -1,0 +1,25 @@
+"""Unified telemetry: spans, counters, gauges, and trace export.
+
+The instrumentation seam for the whole stack -- oracles, search,
+placement sessions, and the trainer all emit through this module (and
+stay no-ops until ``enable()`` / a ``--trace`` flag turns recording
+on).  See ``docs/api.md`` "Telemetry & tracing" for the span API, sink
+formats, and how to read a placement trace in Perfetto.
+"""
+
+from repro.telemetry.core import (DEFAULT_MAX_EVENTS, MetricsRegistry,
+                                  NOOP_SPAN, Span, Tracer, count,
+                                  counter_value, disable, enable, gauge,
+                                  get_tracer, is_enabled, reset, snapshot,
+                                  span)
+from repro.telemetry.sinks import (load_trace, read_chrome_trace, read_jsonl,
+                                   summarize, trace_to, write_chrome_trace,
+                                   write_jsonl)
+
+__all__ = [
+    "DEFAULT_MAX_EVENTS", "MetricsRegistry", "NOOP_SPAN", "Span", "Tracer",
+    "count", "counter_value", "disable", "enable", "gauge", "get_tracer",
+    "is_enabled", "load_trace", "read_chrome_trace", "read_jsonl", "reset",
+    "snapshot", "span", "summarize", "trace_to", "write_chrome_trace",
+    "write_jsonl",
+]

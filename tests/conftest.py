@@ -33,6 +33,19 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture()
+def telemetry():
+    """Enabled telemetry with clean counters; restores the disabled
+    default (and clears again) on teardown, so no counter state leaks
+    between tests."""
+    from repro import telemetry as tele
+    tele.reset()
+    tele.enable()
+    yield tele
+    tele.reset()
+    tele.disable()
+
+
 @pytest.fixture(scope="session")
 def save_v1_calibration():
     """Writer for the exact pre-fusion (v1) artifact format, shared by

@@ -91,12 +91,14 @@ def test_cached_oracle_info_and_lru_eviction(dlrm_pool, sim):
     assert oracle.num_evaluations == 3
     oracle.evaluate(dlrm_pool[:4], a2, 2)       # evicted -> re-measured
     assert oracle.num_evaluations == 4
-    info = oracle.info()
+    with pytest.warns(DeprecationWarning, match="telemetry"):
+        info = oracle.info()
     assert info["hits"] == 2 and info["misses"] == 4
     assert info["entries"] == 2 and info["max_entries"] == 2
     assert info["hit_rate"] == pytest.approx(2 / 6)
     assert info["eviction"] == "lru"
-    assert CachedOracle(sim).info()["hit_rate"] == 0.0
+    with pytest.warns(DeprecationWarning):
+        assert CachedOracle(sim).info()["hit_rate"] == 0.0
 
 
 def test_kernel_oracle_smoke(dlrm_pool):

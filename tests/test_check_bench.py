@@ -40,6 +40,12 @@ FUSION = {
     "determinism": {"mean_overall_fused": 1.5290863313,
                     "mean_overall_additive": 3.1231791824},
 }
+TELEMETRY = {
+    "benchmark": "b10_telemetry_overhead",
+    "limits": {"offpath_pct": 1.0, "enabled_pct": 5.0},
+    "regimes": {"scale": {"offpath_overhead_pct": 0.17,
+                          "enabled_overhead_pct": 1.7}},
+}
 
 
 def _gate(tmp_path, baseline, fresh, extra=()):
@@ -50,7 +56,7 @@ def _gate(tmp_path, baseline, fresh, extra=()):
     return check_bench.main(["--pair", str(b), str(f), *extra])
 
 
-@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION])
+@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION, TELEMETRY])
 def test_identical_runs_pass(tmp_path, doc):
     assert _gate(tmp_path, doc, copy.deepcopy(doc)) == 0
 
@@ -105,3 +111,18 @@ def test_mismatched_config_refuses_to_pass(tmp_path):
 
 def test_benchmark_kind_mismatch_fails(tmp_path):
     assert _gate(tmp_path, TRAIN, copy.deepcopy(ORACLE)) == 1
+
+
+def test_telemetry_overhead_gates_on_fresh_limits(tmp_path):
+    """b10 gates the FRESH file's percentages (host-independent), with
+    the committed limits pinned against silent loosening."""
+    fresh = copy.deepcopy(TELEMETRY)
+    fresh["regimes"]["scale"]["offpath_overhead_pct"] = 1.3
+    assert _gate(tmp_path, TELEMETRY, fresh) == 1
+    fresh = copy.deepcopy(TELEMETRY)
+    fresh["regimes"]["scale"]["enabled_overhead_pct"] = 6.2
+    assert _gate(tmp_path, TELEMETRY, fresh) == 1
+    # loosened fresh limits must not relax the gate
+    fresh = copy.deepcopy(TELEMETRY)
+    fresh["limits"] = {"offpath_pct": 10.0, "enabled_pct": 50.0}
+    assert _gate(tmp_path, TELEMETRY, fresh) == 1

@@ -241,56 +241,40 @@ def test_scorer_caps_rows_and_dedups(dlrm_pool, rng):
 
 # ---- dispatch guards --------------------------------------------------------
 
-
-class _SpyOracle:
-    """Counts single vs batched oracle traffic (PR 4 guard pattern)."""
-
-    def __init__(self):
-        self.inner = SimOracle(CostSimulator(seed=0))
-        self.single_calls = 0
-        self.batched_calls = 0
-
-    @property
-    def mem_capacity_gb(self):
-        return self.inner.mem_capacity_gb
-
-    @property
-    def num_evaluations(self):
-        return self.inner.num_evaluations
-
-    def evaluate(self, raw, assignment, n_devices):
-        self.single_calls += 1
-        return self.inner.evaluate(raw, assignment, n_devices)
-
-    def evaluate_many(self, raw, assignments, n_devices):
-        self.batched_calls += 1
-        return self.inner.evaluate_many(raw, assignments, n_devices)
-
-    def legal_batch(self, raw, assignments, n_devices):
-        return self.inner.legal_batch(raw, assignments, n_devices)
+# PR 4's _SpyOracle wrapper is gone: the production ``SimOracle`` now
+# counts its own dispatches through ``repro.telemetry``, so these guards
+# assert against the real instrumented code path instead of a shim.
 
 
-def test_search_never_calls_single_evaluate(dlrm_pool):
+def _sim_counts(tele):
+    """(single evaluate calls, batched evaluate_many calls) so far."""
+    return (tele.counter_value("oracle.sim.evaluate_calls"),
+            tele.counter_value("oracle.sim.evaluate_many_calls"))
+
+
+def test_search_never_calls_single_evaluate(dlrm_pool, telemetry):
     """The whole search path is batched: one evaluate_many per scored
     round, zero per-candidate evaluate calls."""
     task = _tasks(dlrm_pool, 10, 4, 1, seed=5)[0]
-    spy = _SpyOracle()
-    sp = SearchPlacer(spy, config=SearchConfig(strategy="lns+evolution",
-                                               budget_ms=None, max_evals=128,
-                                               seed=0))
+    sp = SearchPlacer(_oracle(),
+                      config=SearchConfig(strategy="lns+evolution",
+                                          budget_ms=None, max_evals=128,
+                                          seed=0))
     sp.place(task)
-    assert spy.single_calls == 0
-    assert 1 <= spy.batched_calls == sp.last_scorer.batches
+    single, batched = _sim_counts(telemetry)
+    assert single == 0
+    assert 1 <= batched == sp.last_scorer.batches
 
 
-def test_random_placer_candidates_batched(dlrm_pool):
+def test_random_placer_candidates_batched(dlrm_pool, telemetry):
     """RandomPlacer's candidate scoring is one evaluate_many, not a
     per-candidate loop."""
     task = _tasks(dlrm_pool, 10, 4, 1, seed=6)[0]
-    spy = _SpyOracle()
-    p = RandomPlacer(spy, seed=0, n_candidates=8)
+    p = RandomPlacer(_oracle(), seed=0, n_candidates=8)
     placement = p.place(task)
-    assert spy.single_calls == 0 and spy.batched_calls == 1
+    single, batched = _sim_counts(telemetry)   # before the reference runs
+    assert single == 0 and batched == 1
+    assert telemetry.counter_value("oracle.sim.rows") == 8
     assert placement.candidates == 8 and placement.oracle_evals == 8
     # the winner is the measured argmin over the 8 draws
     ref = RandomPlacer(SimOracle(CostSimulator(seed=0)), seed=0)
@@ -299,15 +283,15 @@ def test_random_placer_candidates_batched(dlrm_pool):
     np.testing.assert_array_equal(placement.assignment, best)
 
 
-def test_portfolio_placer_batched_and_optimal(dlrm_pool):
+def test_portfolio_placer_batched_and_optimal(dlrm_pool, telemetry):
     """PortfolioPlacer scores all member proposals in one batch per task
     and returns the measured-best expert."""
     tasks = _tasks(dlrm_pool, 10, 4, 3, seed=7)
-    spy = _SpyOracle()
-    placers = make_baseline_placers(spy, include_portfolio=True)
+    placers = make_baseline_placers(_oracle(), include_portfolio=True)
     out = placers["expert_best"].place_many(tasks)
-    assert spy.single_calls == 0
-    assert spy.batched_calls == len(tasks)
+    single, batched = _sim_counts(telemetry)   # before the reference runs
+    assert single == 0
+    assert batched == len(tasks)
     experts = ("size", "dim", "lookup", "size_lookup")
     for t, p in zip(tasks, out):
         best = min(
@@ -316,17 +300,19 @@ def test_portfolio_placer_batched_and_optimal(dlrm_pool):
         assert _cost(t, p.assignment) == _cost(t, best)
 
 
-def test_rnn_training_rewards_batched(dlrm_pool):
+def test_rnn_training_rewards_batched(dlrm_pool, telemetry):
     """The RNN baseline's per-episode reward loop is gone: one
     evaluate_many per update step."""
     from repro.core.rnn_policy import RNNPlacer, RNNPolicyConfig
     tasks = _tasks(dlrm_pool, 8, 2, 2, seed=8)
-    spy = _SpyOracle()
-    rnn = RNNPlacer(tasks, spy, RNNPolicyConfig(n_updates=3, n_episode=4))
+    oracle = _oracle()
+    rnn = RNNPlacer(tasks, oracle, RNNPolicyConfig(n_updates=3, n_episode=4))
     rnn.train()
-    assert spy.single_calls == 0
-    assert spy.batched_calls == 3
-    assert spy.num_evaluations == 3 * 4
+    single, batched = _sim_counts(telemetry)
+    assert single == 0
+    assert batched == 3
+    assert telemetry.counter_value("oracle.sim.rows") == 3 * 4
+    assert oracle.num_evaluations == 3 * 4
 
 
 # ---- session integration ----------------------------------------------------
@@ -354,7 +340,8 @@ def test_cached_oracle_batch_counters(dlrm_pool, rng):
     oracle.evaluate_many(raw, A, 4)
     oracle.evaluate_many(raw, A, 4)
     oracle.evaluate(raw, A[0], 4)              # single path: not batched
-    info = oracle.info()
+    with pytest.warns(DeprecationWarning):     # forward: telemetry.snapshot
+        info = oracle.info()
     assert info["batched_calls"] == 2
     assert info["batched_hits"] == 6 and info["batched_misses"] == 6
     assert info["batched_hit_rate"] == 0.5
@@ -371,6 +358,43 @@ def test_search_cache_locality(dlrm_pool):
         sp = SearchPlacer(oracle, config=SearchConfig(
             strategy="lns", budget_ms=None, max_evals=64, seed=0))
         sp.place(task)
-    info = oracle.info()
+    with pytest.warns(DeprecationWarning):
+        info = oracle.info()
     assert info["batched_hit_rate"] >= 0.45    # second run all hits
     assert sp.last_scorer.hardware_evals == 0  # no new hardware measurements
+
+
+# ---- hardware_evals accounting ---------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["lns", "evolution", "lns+evolution"])
+def test_hardware_evals_exact_per_strategy(dlrm_pool, strategy):
+    """On an uncached oracle every scored row is a hardware measurement,
+    so the scorer's ledger must equal the oracle's own counter delta --
+    exactly, per strategy.  (Regression: the pre-telemetry scorer
+    snapshotted ``num_evaluations`` at construction time, which
+    double-counted rows whenever anything else touched the oracle.)"""
+    task = _tasks(dlrm_pool, 10, 4, 1, seed=6)[0]
+    oracle = _oracle()
+    n0 = oracle.num_evaluations
+    sp = SearchPlacer(oracle, config=SearchConfig(
+        strategy=strategy, budget_ms=None, max_evals=48, seed=0))
+    sp.place(task)
+    scorer = sp.last_scorer
+    assert scorer.hardware_evals == oracle.num_evaluations - n0
+    assert scorer.hardware_evals == scorer.evals  # SimOracle: no cache
+    assert 0 < scorer.evals <= 48
+
+
+def test_hardware_evals_ignore_foreign_traffic(dlrm_pool, rng):
+    """Traffic from OTHER users of a shared oracle must not be billed to
+    the scorer: only deltas across its own score() calls count."""
+    task = _tasks(dlrm_pool, 8, 4, 1, seed=7)[0]
+    oracle = _oracle()
+    scorer = SearchScorer(oracle, task, max_evals=16)
+    # foreign traffic after construction, before any score() call
+    oracle.evaluate_many(task.raw_features,
+                         rng.integers(0, 4, size=(5, 8)), 4)
+    A = scorer.filter_new(rng.integers(0, 4, size=(4, 8)))
+    scorer.score(A)
+    assert scorer.hardware_evals == A.shape[0]  # 5 foreign rows excluded
