@@ -228,12 +228,85 @@ def check_telemetry(gate: Gate, baseline: dict, fresh: dict) -> None:
     )
 
 
+def check_serve(gate: Gate, baseline: dict, fresh: dict) -> None:
+    """b11: serving invariants on the FRESH run (host-independent --
+    hit-vs-cold ratios and policy orderings, not absolute latencies),
+    with limits pinned against the committed baseline.  The only
+    drift-gated cell is the ``never`` leg's request cost: its
+    placements are one decode per job, independent of admission
+    timing, so it is reproducible per (host, jax) like b9's costs."""
+    limits = fresh.get("limits", {})
+    speedup_limit = limits.get("hit_speedup_p50", 20.0)
+    rate_limit = limits.get("min_hit_rate", 0.5)
+    gate.invariant(
+        "b11.fresh_has_regimes",
+        bool(fresh.get("regimes")),
+        f"fresh regimes measured: {sorted(fresh.get('regimes', {}))}",
+    )
+    for name, reg in fresh.get("regimes", {}).items():
+        legs, cold = reg["legs"], reg["cold"]
+        drift = legs["drift"]
+        gate.invariant(
+            f"b11.{name}.hit_speedup_p50_over_{speedup_limit}x",
+            drift["hit"]["p50_ms"] is not None
+            and reg["hit_speedup_p50"] >= speedup_limit,
+            f"warm hit p50 {drift['hit']['p50_ms']} ms vs cold place p50 "
+            f"{cold['p50_ms']} ms (speedup {reg['hit_speedup_p50']}x, "
+            f"limit {speedup_limit}x)",
+        )
+        gate.invariant(
+            f"b11.{name}.hit_rate_over_{rate_limit}",
+            drift["hit_rate"] >= rate_limit,
+            f"drift-leg hit rate {drift['hit_rate']} "
+            f"(limit {rate_limit})",
+        )
+        gate.invariant(
+            f"b11.{name}.hit_p99_under_cold_p50",
+            drift["hit"]["p99_ms"] is not None
+            and drift["hit"]["p99_ms"] <= cold["p50_ms"],
+            f"hit p99 {drift['hit']['p99_ms']} ms vs cold p50 "
+            f"{cold['p50_ms']} ms",
+        )
+        gate.invariant(
+            f"b11.{name}.drift_beats_never",
+            drift["end_to_end_cost_ms"]
+            < legs["never"]["end_to_end_cost_ms"],
+            f"end-to-end drift {drift['end_to_end_cost_ms']} ms vs "
+            f"never-re-place {legs['never']['end_to_end_cost_ms']} ms",
+        )
+        gate.invariant(
+            f"b11.{name}.drift_moves_fewer_bytes_than_always",
+            drift["bytes_moved_gb"] < legs["always"]["bytes_moved_gb"],
+            f"drift moved {drift['bytes_moved_gb']} GB vs always "
+            f"{legs['always']['bytes_moved_gb']} GB",
+        )
+        gate.invariant(
+            f"b11.{name}.zero_drift_replay_identical",
+            reg["determinism"]["zero_drift_identical"],
+            f"zero-drift replay vs place_many: {reg['determinism']}",
+        )
+    gate.invariant(
+        "b11.limits_match_baseline",
+        baseline.get("limits") == fresh.get("limits"),
+        f"baseline limits {baseline.get('limits')} vs fresh "
+        f"{fresh.get('limits')}",
+    )
+    for regime in _matched_regimes(baseline, fresh):
+        b, f = baseline["regimes"][regime], fresh["regimes"][regime]
+        gate.eval_cost(
+            f"b11.{regime}.never_leg_request_cost_mean",
+            b["legs"]["never"]["request_cost_mean_ms"],
+            f["legs"]["never"]["request_cost_mean_ms"],
+        )
+
+
 CHECKERS = {
     "b6_train_throughput": check_train,
     "b7_oracle_throughput": check_oracle,
     "b8_fusion_model": check_fusion,
     "b9_search": check_search,
     "b10_telemetry_overhead": check_telemetry,
+    "b11_serve": check_serve,
 }
 
 

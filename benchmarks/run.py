@@ -32,6 +32,7 @@ MODULES = [
     "b8_fusion_model",        # fusion-aware vs additive multi-table costs
     "b9_search",              # search-augmented placement anytime curves
     "b10_telemetry_overhead",  # telemetry off-path / enabled overhead bounds
+    "b11_serve",              # placement serving: cache, admission, drift
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

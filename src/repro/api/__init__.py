@@ -18,11 +18,17 @@ One interface over every placement strategy and cost backend:
   optional post-decode ``refiner`` pass;
 * ``SearchPlacer`` / ``SearchConfig`` (re-exported lazily from
   ``repro.search``) -- anytime search refinement of any seed placer
-  through the batched oracle.
+  through the batched oracle;
+* ``PlacementService`` / ``ServeConfig`` (re-exported lazily from
+  ``repro.serve``) -- long-running serving: digest-keyed placement
+  cache, micro-batch admission, drift-triggered re-placement;
+* blake2b digest helpers (``placement_key`` / ``placement_keys`` /
+  ``task_key``) shared by ``CachedOracle`` and the serving cache.
 
 See ``docs/api.md`` for usage and the migration guide.
 """
 
+from repro.api.digest import placement_key, placement_keys, task_key
 from repro.api.oracle import (CachedOracle, CostOracle, KernelOracle,
                               MeasuredOracle, SimOracle, ensure_oracle,
                               evaluate_many, legal_batch)
@@ -34,18 +40,21 @@ from repro.api.placers import (DreamShardPlacer, ExpertPlacer,
                                RandomPlacer, make_baseline_placers)
 from repro.api.session import PlacementSession
 
-# repro.search imports from repro.api, so its names are re-exported
-# lazily (PEP 562) to keep `import repro.api` cycle-free
+# repro.search / repro.serve import from repro.api, so their names are
+# re-exported lazily (PEP 562) to keep `import repro.api` cycle-free
 _SEARCH_EXPORTS = ("SearchConfig", "SearchPlacer", "SearchScorer")
+_SERVE_EXPORTS = ("PlacementCache", "PlacementService", "ServeConfig",
+                  "ServeResult")
 
 __all__ = [
     "BasePlacer", "CachedOracle", "CostOracle", "DreamShardPlacer",
     "ExpertPlacer", "KernelOracle", "MeasuredOracle", "Placement",
-    "PlacementSession", "Placer", "PortfolioPlacer",
-    "RNNPlacerAdapter", "RandomPlacer", "SearchConfig", "SearchPlacer",
-    "SearchScorer", "SimOracle", "ensure_oracle",
-    "evaluate_many", "evaluate_placements", "evaluate_placer", "legal_batch",
-    "make_baseline_placers", "measure_placements",
+    "PlacementCache", "PlacementService", "PlacementSession", "Placer",
+    "PortfolioPlacer", "RNNPlacerAdapter", "RandomPlacer", "SearchConfig",
+    "SearchPlacer", "SearchScorer", "ServeConfig", "ServeResult",
+    "SimOracle", "ensure_oracle", "evaluate_many", "evaluate_placements",
+    "evaluate_placer", "legal_batch", "make_baseline_placers",
+    "measure_placements", "placement_key", "placement_keys", "task_key",
 ]
 
 
@@ -53,6 +62,9 @@ def __getattr__(name: str):
     if name in _SEARCH_EXPORTS:
         import repro.search as _search
         return getattr(_search, name)
+    if name in _SERVE_EXPORTS:
+        import repro.serve as _serve
+        return getattr(_serve, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

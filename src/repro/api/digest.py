@@ -1,0 +1,77 @@
+"""Shared blake2b digest helpers: the one key machinery for every cache.
+
+Both memoization layers key on deterministic digests of their query
+bytes -- ``CachedOracle`` on *(task, placement)* pairs (cost cache),
+``repro.serve.PlacementCache`` on *tasks* (placement cache).  The key
+construction used to live inline in ``CachedOracle._key`` /
+``_keys_batch``; it is factored out here so both caches hash the same
+canonical byte streams (``repro.sim.costsim.placement_bytes`` for
+placements) with the same width.
+
+All keys are blake2b-128: wide enough to be collision-safe at any sweep
+size, stable across processes (unlike the salted built-in ``hash``),
+and cheap (~1 us per key).  Batched variants hash the shared ``raw``
+prefix ONCE and fork the hash state per row, so a ``(P, M)`` batch pays
+for one prefix plus P suffixes.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from repro.core import features as F
+from repro.sim.costsim import placement_bytes
+
+DIGEST_SIZE = 16        # blake2b-128 everywhere
+
+
+def placement_key(raw: np.ndarray, assignment: np.ndarray,
+                  n_devices: int) -> bytes:
+    """Digest of one *(task, placement)* query -- the ``CachedOracle``
+    memo key.  Hashes the canonical ``placement_bytes`` stream (raw
+    features + assignment + device count)."""
+    return hashlib.blake2b(placement_bytes(raw, assignment, n_devices),
+                           digest_size=DIGEST_SIZE).digest()
+
+
+def placement_keys(raw: np.ndarray, assignments: np.ndarray,
+                   n_devices: int) -> list[bytes]:
+    """Row-wise ``placement_key`` over a ``(P, M)`` assignment batch.
+
+    The shared ``raw`` prefix is hashed once (blake2b state copy per
+    row), so the values are bitwise-identical to P independent
+    ``placement_key`` calls at a fraction of the cost.
+    """
+    r = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
+    a = np.ascontiguousarray(np.asarray(assignments, dtype=np.int64))
+    h0 = hashlib.blake2b(r.tobytes(), digest_size=DIGEST_SIZE)
+    suffix = int(n_devices).to_bytes(8, "little")
+    keys = []
+    for row in a:
+        h = h0.copy()
+        h.update(row.tobytes() + suffix)
+        keys.append(h.digest())
+    return keys
+
+
+def task_key(raw: np.ndarray, n_devices: int, *,
+             include_distribution: bool = True) -> bytes:
+    """Digest of one *task* (raw features + device count) -- the
+    ``repro.serve.PlacementCache`` key.
+
+    ``include_distribution=False`` drops the 17-bin access-histogram
+    columns from the digest, keying only on the structural features
+    (dim, hash size, pooling, table size).  That is the serving-cache
+    policy: a stream of near-duplicate requests whose table popularity
+    drifts slowly maps onto ONE cache entry (so repeats skip decode
+    entirely), and histogram movement is handled by the drift loop
+    rather than by key churn.
+    """
+    r = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
+    if not include_distribution:
+        r = np.ascontiguousarray(r[:, :F.DIST_START])
+    return hashlib.blake2b(
+        r.tobytes() + int(n_devices).to_bytes(8, "little"),
+        digest_size=DIGEST_SIZE).digest()

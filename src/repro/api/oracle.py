@@ -32,10 +32,10 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro import telemetry as tele
+from repro.api.digest import placement_key, placement_keys
 from repro.core import features as F
 from repro.sim.costsim import (CostSimulator, SimResult, assignments_legal,
-                               check_assignment_batch, per_device_sums,
-                               placement_bytes)
+                               check_assignment_batch, per_device_sums)
 from repro.sim.hardware import HardwareSpec, PAPER_GPU
 
 
@@ -189,26 +189,14 @@ class CachedOracle:
     def num_evaluations(self) -> int:
         return self.inner.num_evaluations
 
+    # key machinery lives in ``repro.api.digest`` (shared with the
+    # serving-side placement cache); these aliases keep the historical
+    # per-instance surface
     def _key(self, raw, assignment, n_devices) -> bytes:
-        import hashlib
-        return hashlib.blake2b(
-            placement_bytes(raw, assignment, n_devices),
-            digest_size=16).digest()
+        return placement_key(raw, assignment, n_devices)
 
     def _keys_batch(self, raw, assignments, n_devices) -> list[bytes]:
-        """Row-wise ``_key`` over a ``(P, M)`` batch, hashing the shared
-        ``raw`` prefix once (blake2b state copy per row)."""
-        import hashlib
-        r = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
-        a = np.ascontiguousarray(np.asarray(assignments, dtype=np.int64))
-        h0 = hashlib.blake2b(r.tobytes(), digest_size=16)
-        suffix = int(n_devices).to_bytes(8, "little")
-        keys = []
-        for row in a:
-            h = h0.copy()
-            h.update(row.tobytes() + suffix)
-            keys.append(h.digest())
-        return keys
+        return placement_keys(raw, assignments, n_devices)
 
     def _store(self, key: bytes, res: SimResult):
         if len(self._cache) >= self.max_entries:      # evict least-recent

@@ -13,11 +13,11 @@ benchmarks and examples compare strategies without per-strategy glue.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from typing import Iterable, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.api.digest import task_key
 from repro.api.oracle import evaluate_many
 from repro.data.tasks import Task
 from repro.embedding.plan import PlacementPlan, build_plan
@@ -96,11 +96,8 @@ def measure_placements(oracle, tasks: Iterable[Task],
     pairs = list(zip(tasks, placements))
     groups: dict[bytes, list[int]] = {}
     for i, (t, _) in enumerate(pairs):
-        r = np.ascontiguousarray(np.asarray(t.raw_features, np.float64))
-        key = hashlib.blake2b(
-            r.tobytes() + int(t.n_devices).to_bytes(8, "little"),
-            digest_size=16).digest()
-        groups.setdefault(key, []).append(i)
+        groups.setdefault(task_key(t.raw_features, t.n_devices),
+                          []).append(i)
     costs = np.empty(len(pairs))
     for idxs in groups.values():
         task = pairs[idxs[0]][0]

@@ -1,0 +1,18 @@
+"""High-throughput placement serving.
+
+``PlacementService`` fronts a ``PlacementSession`` with a digest-keyed
+placement cache, micro-batch admission, and drift-triggered incremental
+re-placement.  See ``docs/api.md`` ("Placement serving & drift
+re-placement") and ``examples/serve_workflow.py``.
+"""
+
+from repro.serve.cache import CacheEntry, PlacementCache
+from repro.serve.drift import (DriftTracker, MigrationCostOracle,
+                               dist_divergence)
+from repro.serve.service import PlacementService, ServeConfig, ServeResult
+
+__all__ = [
+    "CacheEntry", "DriftTracker", "MigrationCostOracle",
+    "PlacementCache", "PlacementService", "ServeConfig", "ServeResult",
+    "dist_divergence",
+]

@@ -1,0 +1,308 @@
+"""``PlacementService``: the long-running placement serving loop.
+
+``PlacementSession`` is batched *cold* placement: every ``place_many``
+decodes every task from scratch.  Production traffic is a stream of
+millions of near-duplicate requests with slowly drifting table
+popularity, and this module turns the session into a service for that
+workload:
+
+1. **Placement cache** -- requests are keyed on a blake2b task digest
+   (``repro.api.digest.task_key``; structural features only by
+   default, so popularity drift maps to ONE entry).  Repeat tasks are
+   served in dictionary time, skipping decode entirely.
+2. **Micro-batch admission** -- cache misses queue briefly, coalesced
+   by digest, and are flushed per ``(M_pad, D)`` bucket (``max_batch``
+   full, or the oldest request older than ``max_wait_ms``), so every
+   vmapped decode amortizes one compiled bucket shape across a full
+   batch instead of paying ragged singleton calls.
+3. **Drift-triggered re-placement** -- per-table access-histogram
+   EWMAs (``DriftTracker``) are compared to the placed snapshot on
+   every hit; past ``drift_threshold`` the entry is re-placed
+   *incrementally*: ``SearchPlacer.refine`` seeded from the incumbent,
+   scored through a ``MigrationCostOracle`` so moves must pay for the
+   bytes they migrate.
+
+Everything is observable through ``serve.*`` telemetry (cache
+hit/miss/eviction counters, flush spans with batch size and queue
+wait, re-place spans with divergence and bytes moved) plus the
+instance-level ``stats()`` snapshot.  ``benchmarks/b11_serve.py``
+replays a synthetic drifting trace through this loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro import telemetry as tele
+from repro.api.digest import task_key
+from repro.api.oracle import ensure_oracle
+from repro.api.placement import Placement
+from repro.api.session import PlacementSession
+from repro.core import features as F
+from repro.data.tasks import Task
+from repro.serve.cache import CacheEntry, PlacementCache
+from repro.serve.drift import (DriftTracker, MigrationCostOracle,
+                               dist_divergence)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for one ``PlacementService``.
+
+    Admission: a queued bucket flushes when it holds ``max_batch``
+    distinct tasks or its oldest request has waited ``max_wait_ms``.
+    Cache: ``cache_entries`` LRU capacity; ``key_distribution=True``
+    folds the access histograms into the digest (every drifted request
+    then misses -- the always-decode policy; the default keys on
+    structural features only).
+    Drift: histogram EWMAs (``ewma_alpha``) trigger a re-placement when
+    their max per-table total-variation distance from the placed
+    snapshot exceeds ``drift_threshold`` (``None`` disables the loop);
+    the refinement runs ``replace_strategy`` under
+    ``replace_max_evals``/``replace_budget_ms`` with a migration term
+    of ``migration_ms_per_gb`` x bytes moved in its objective.
+    """
+
+    max_wait_ms: float = 2.0
+    max_batch: int = 16
+    cache_entries: int = 4096
+    key_distribution: bool = False
+    ewma_alpha: float = 0.1
+    drift_threshold: float | None = 0.1
+    migration_ms_per_gb: float = 25.0
+    replace_strategy: str = "lns"
+    replace_max_evals: int | None = 96
+    replace_budget_ms: float | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One served request: the placement plus serving provenance."""
+
+    placement: Placement
+    source: str             # "cache" | "decode"
+    latency_ms: float       # submit -> placement available
+    queue_wait_ms: float    # admission-queue share of the latency
+    replaced: bool = False  # a drift re-placement ran while serving this
+    tag: object = None      # caller's correlation token
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One queued decode (unique task digest) with its waiting tickets."""
+
+    key: bytes
+    raw: np.ndarray
+    n_devices: int
+    tickets: list[tuple[object, float]]   # (tag, t_enqueue)
+
+
+class PlacementService:
+    """Cache + admission + drift loop in front of a ``PlacementSession``.
+
+    Parameters
+    ----------
+    agent: a trained ``DreamShard`` (decode path), or pass ``session=``
+        to reuse an existing warmed ``PlacementSession``.
+    oracle: the ``CostOracle`` scoring drift re-placements (defaults to
+        the agent's training oracle).
+    clock: seconds-valued time source (injectable for deterministic
+        admission tests; defaults to ``time.perf_counter``).
+
+    ``submit`` returns the list of requests *completed by that call*: a
+    cache hit completes immediately; a miss enqueues and may complete
+    together with other queued requests when its bucket flushes.  Call
+    ``flush()`` to drain stragglers (end of stream) and ``poll()`` to
+    flush buckets whose wait deadline passed without new traffic.
+    """
+
+    def __init__(self, agent=None, oracle=None,
+                 config: ServeConfig | None = None,
+                 session: PlacementSession | None = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if session is None:
+            if agent is None:
+                raise ValueError("pass a DreamShard agent or a session")
+            session = PlacementSession(agent)
+        self.session = session
+        self.oracle = ensure_oracle(
+            oracle if oracle is not None else session.agent.oracle)
+        self.config = config if config is not None else ServeConfig()
+        self.clock = clock
+        self.cache = PlacementCache(self.config.cache_entries)
+        self.drift = DriftTracker(self.config.ewma_alpha)
+        self._queues: dict[tuple, dict[bytes, _Pending]] = {}
+        self.requests = 0
+        self.coalesced = 0          # misses absorbed by a queued duplicate
+        self.decode_batches = 0
+        self.decoded_tasks = 0
+        self.replace_events = 0     # drift triggers (refine ran)
+        self.migrations = 0         # triggers that actually moved tables
+        self.bytes_moved_gb = 0.0
+
+    # ---- keying --------------------------------------------------------------
+
+    def request_key(self, raw_features: np.ndarray, n_devices: int) -> bytes:
+        return task_key(raw_features, n_devices,
+                        include_distribution=self.config.key_distribution)
+
+    # ---- serving -------------------------------------------------------------
+
+    def submit(self, raw_features: np.ndarray, n_devices: int,
+               tag: object = None) -> list[ServeResult]:
+        """Serve one request; returns every request completed by this
+        call (the hit itself, or queued requests whose bucket flushed)."""
+        now = self.clock()
+        self.requests += 1
+        tele.count("serve.requests")
+        raw = np.asarray(raw_features, dtype=np.float64)
+        key = self.request_key(raw, n_devices)
+        ewma = self.drift.observe(key, raw[:, F.DIST_START:])
+
+        entry = self.cache.get(key)
+        if entry is not None:
+            replaced = self._maybe_replace(key, entry, raw, ewma, n_devices)
+            latency = (self.clock() - now) * 1e3
+            return [ServeResult(placement=entry.placement, source="cache",
+                                latency_ms=latency, queue_wait_ms=0.0,
+                                replaced=replaced, tag=tag)]
+
+        bucket = self.session.bucket_key(Task.of(raw, n_devices))
+        queue = self._queues.setdefault(bucket, {})
+        pending = queue.get(key)
+        if pending is not None:                   # near-duplicate in flight
+            self.coalesced += 1
+            tele.count("serve.coalesced")
+            pending.tickets.append((tag, now))
+        else:
+            queue[key] = _Pending(key=key, raw=raw, n_devices=n_devices,
+                                  tickets=[(tag, now)])
+        return self._flush_due(now)
+
+    def poll(self) -> list[ServeResult]:
+        """Flush buckets whose oldest request outwaited ``max_wait_ms``
+        (call between requests on a quiet stream)."""
+        return self._flush_due(self.clock())
+
+    def flush(self) -> list[ServeResult]:
+        """Drain every queued request regardless of batch/wait state."""
+        out = []
+        for bucket in list(self._queues):
+            out.extend(self._flush_bucket(bucket))
+        return out
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ---- admission -----------------------------------------------------------
+
+    def _flush_due(self, now: float) -> list[ServeResult]:
+        cfg = self.config
+        out = []
+        for bucket in list(self._queues):
+            queue = self._queues[bucket]
+            if not queue:
+                continue
+            oldest = min(t for p in queue.values() for _, t in p.tickets)
+            if len(queue) >= cfg.max_batch or \
+                    (now - oldest) * 1e3 >= cfg.max_wait_ms:
+                out.extend(self._flush_bucket(bucket))
+        return out
+
+    def _flush_bucket(self, bucket: tuple) -> list[ServeResult]:
+        pendings = list(self._queues.pop(bucket, {}).values())
+        if not pendings:
+            return []
+        t0 = self.clock()
+        oldest = min(t for p in pendings for _, t in p.tickets)
+        tasks = [Task.of(p.raw, p.n_devices) for p in pendings]
+        with tele.span("serve.flush", m_pad=bucket[0], n_devices=bucket[1],
+                       tasks=len(tasks),
+                       queue_wait_ms=round((t0 - oldest) * 1e3, 3)):
+            placements = self.session.place_many(tasks)
+        t1 = self.clock()
+        self.decode_batches += 1
+        self.decoded_tasks += len(tasks)
+        tele.count("serve.flushes")
+        tele.count("serve.decoded", len(tasks))
+        out = []
+        for pend, placement in zip(pendings, placements):
+            self.cache.put(pend.key, CacheEntry(
+                placement=placement,
+                snapshot=np.array(pend.raw[:, F.DIST_START:])))
+            for tag, t_enq in pend.tickets:
+                out.append(ServeResult(
+                    placement=placement, source="decode",
+                    latency_ms=(t1 - t_enq) * 1e3,
+                    queue_wait_ms=(t0 - t_enq) * 1e3, tag=tag))
+        return out
+
+    # ---- drift ---------------------------------------------------------------
+
+    def _maybe_replace(self, key: bytes, entry: CacheEntry,
+                       raw: np.ndarray, ewma: np.ndarray,
+                       n_devices: int) -> bool:
+        cfg = self.config
+        if cfg.drift_threshold is None:
+            return False
+        divergence = dist_divergence(ewma, entry.snapshot)
+        if divergence <= cfg.drift_threshold:
+            return False
+        # re-place against the *current* traffic estimate: structural
+        # features from the request, histograms from the EWMA
+        from repro.search import SearchConfig, SearchPlacer
+        current = np.array(raw)
+        current[:, F.DIST_START:] = ewma
+        task = Task.of(current, n_devices)
+        incumbent = entry.placement
+        with tele.span("serve.replace", divergence=round(divergence, 4),
+                       M=task.n_tables, n_devices=n_devices) as sp:
+            oracle = MigrationCostOracle.wrap(
+                self.oracle, incumbent.assignment, cfg.migration_ms_per_gb)
+            placer = SearchPlacer(
+                oracle, agent=self.session.agent, name="serve.replace",
+                config=SearchConfig(strategy=cfg.replace_strategy,
+                                    budget_ms=cfg.replace_budget_ms,
+                                    max_evals=cfg.replace_max_evals,
+                                    seed=cfg.seed))
+            refined = placer.refine(task, incumbent)
+            moved_gb = float(((refined.assignment != incumbent.assignment)
+                              * current[:, F.TABLE_SIZE_GB]).sum())
+            sp.set(moved_gb=round(moved_gb, 4))
+        entry.placement = refined
+        entry.snapshot = np.array(ewma)
+        entry.replaces += 1
+        self.replace_events += 1
+        self.bytes_moved_gb += moved_gb
+        tele.count("serve.replace_events")
+        if moved_gb > 0.0:
+            self.migrations += 1
+            tele.count("serve.migrations")
+        return True
+
+    # ---- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving-behaviour snapshot (instance counters; the same
+        signals stream through ``serve.*`` telemetry counters)."""
+        return {
+            "requests": self.requests,
+            "hits": self.cache.hits,
+            "misses": self.cache.misses,
+            "hit_rate": self.cache.hit_rate,
+            "evictions": self.cache.evictions,
+            "entries": len(self.cache),
+            "coalesced": self.coalesced,
+            "pending": self.pending,
+            "decode_batches": self.decode_batches,
+            "decoded_tasks": self.decoded_tasks,
+            "replace_events": self.replace_events,
+            "migrations": self.migrations,
+            "bytes_moved_gb": self.bytes_moved_gb,
+        }

@@ -79,7 +79,8 @@ def test_cached_oracle_hit_miss_counting(dlrm_pool, sim):
     assert oracle.num_evaluations == 3
 
 
-def test_cached_oracle_info_and_lru_eviction(dlrm_pool, sim):
+def test_cached_oracle_lru_eviction_and_counters(dlrm_pool, sim, telemetry):
+    from repro import telemetry as tele
     oracle = CachedOracle(sim, max_entries=2)
     a1, a2, a3 = (np.array(x) for x in
                   ([0, 1, 0, 1], [1, 0, 1, 0], [0, 0, 1, 1]))
@@ -91,14 +92,20 @@ def test_cached_oracle_info_and_lru_eviction(dlrm_pool, sim):
     assert oracle.num_evaluations == 3
     oracle.evaluate(dlrm_pool[:4], a2, 2)       # evicted -> re-measured
     assert oracle.num_evaluations == 4
+    assert (oracle.hits, oracle.misses) == (2, 4)
+    assert oracle.evictions == 2
+    # the same accounting streams through process-wide telemetry
+    counters = tele.snapshot()["counters"]
+    assert counters["oracle.cache.hits"] == 2
+    assert counters["oracle.cache.misses"] == 4
+
+
+def test_cached_oracle_info_is_deprecated(sim):
+    """``info()`` survives as a deprecated alias of the counters; the
+    supported surfaces are instance counters + ``telemetry.snapshot()``."""
     with pytest.warns(DeprecationWarning, match="telemetry"):
-        info = oracle.info()
-    assert info["hits"] == 2 and info["misses"] == 4
-    assert info["entries"] == 2 and info["max_entries"] == 2
-    assert info["hit_rate"] == pytest.approx(2 / 6)
-    assert info["eviction"] == "lru"
-    with pytest.warns(DeprecationWarning):
-        assert CachedOracle(sim).info()["hit_rate"] == 0.0
+        info = CachedOracle(sim).info()
+    assert info["hit_rate"] == 0.0 and info["eviction"] == "lru"
 
 
 def test_kernel_oracle_smoke(dlrm_pool):
@@ -216,6 +223,31 @@ def test_session_no_retrace_across_batch_sizes(suite):
     assert session.num_compiles == 2
     np.testing.assert_array_equal(p1.assignment, both[0].assignment)
     np.testing.assert_array_equal(p1b.assignment, both[1].assignment)
+
+
+def test_session_bucket_reuse_across_interleaved_batches(
+        suite, dlrm_pool, telemetry):
+    """Interleaved ``place_many`` calls over mixed (M, D) shapes reuse
+    per-bucket traces: one compile per distinct (M_pad, D, b_pad)
+    regardless of call order, observable via ``session.bucket_compiles``."""
+    from repro import telemetry as tele
+    _, _, agent = suite
+    _, test_ids = split_pool(dlrm_pool, seed=0)
+    t8a = sample_tasks(dlrm_pool, test_ids, 8, 2, 2, seed=11)
+    t8b = sample_tasks(dlrm_pool, test_ids, 8, 2, 2, seed=12)
+    t11 = sample_tasks(dlrm_pool, test_ids, 11, 2, 2, seed=13)
+    t8d4 = sample_tasks(dlrm_pool, test_ids, 8, 4, 2, seed=14)
+    session = PlacementSession(agent, bucket_tables=8)
+    session.place_many(t8a + t11)         # cold: (8, 2) and (16, 2) buckets
+    assert session.num_compiles == 2
+    assert tele.counter_value("session.bucket_compiles") == 2
+    session.place_many(t11 + t8b)         # interleaved revisit: no retrace
+    assert session.num_compiles == 2
+    session.place_many(t8d4)              # new D -> exactly one new trace
+    assert session.num_compiles == 3
+    session.place_many(t8b + t8d4 + t11)  # all-warm mixed batch: no retrace
+    assert session.num_compiles == 3
+    assert tele.counter_value("session.bucket_compiles") == 3
 
 
 def test_session_estimates_match_per_task(suite):

@@ -46,6 +46,34 @@ TELEMETRY = {
     "regimes": {"scale": {"offpath_overhead_pct": 0.17,
                           "enabled_overhead_pct": 1.7}},
 }
+SERVE = {
+    "benchmark": "b11_serve",
+    "limits": {"hit_speedup_p50": 20.0, "min_hit_rate": 0.5},
+    "regimes": {"quick": {
+        "config": {"n_jobs": 6, "n_requests": 400},
+        "cold": {"p50_ms": 3.0, "p99_ms": 5.2},
+        "hit_speedup_p50": 118.4,
+        "legs": {
+            "drift": {"hit_rate": 0.79, "hit": {"p50_ms": 0.025,
+                                                "p99_ms": 0.072},
+                      "bytes_moved_gb": 0.28,
+                      "end_to_end_cost_ms": 7033.8,
+                      "request_cost_mean_ms": 17.4},
+            "never": {"hit_rate": 0.91, "hit": {"p50_ms": 0.01,
+                                                "p99_ms": 0.05},
+                      "bytes_moved_gb": 0.0,
+                      "end_to_end_cost_ms": 8530.2,
+                      "request_cost_mean_ms": 21.3},
+            "always": {"hit_rate": 0.90, "hit": {"p50_ms": None,
+                                                 "p99_ms": None},
+                       "bytes_moved_gb": 31.0,
+                       "end_to_end_cost_ms": 7430.2,
+                       "request_cost_mean_ms": 16.6},
+        },
+        "determinism": {"requests": 24, "replaces": 0,
+                        "zero_drift_identical": True},
+    }},
+}
 
 
 def _gate(tmp_path, baseline, fresh, extra=()):
@@ -56,7 +84,7 @@ def _gate(tmp_path, baseline, fresh, extra=()):
     return check_bench.main(["--pair", str(b), str(f), *extra])
 
 
-@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION, TELEMETRY])
+@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION, TELEMETRY, SERVE])
 def test_identical_runs_pass(tmp_path, doc):
     assert _gate(tmp_path, doc, copy.deepcopy(doc)) == 0
 
@@ -111,6 +139,53 @@ def test_mismatched_config_refuses_to_pass(tmp_path):
 
 def test_benchmark_kind_mismatch_fails(tmp_path):
     assert _gate(tmp_path, TRAIN, copy.deepcopy(ORACLE)) == 1
+
+
+def test_serve_invariants_gate_on_fresh(tmp_path):
+    """b11 gates the FRESH run's serving invariants: hit speedup and hit
+    rate over the pinned limits, drift beating both strawmen, and the
+    zero-drift identity."""
+    fresh = copy.deepcopy(SERVE)
+    fresh["regimes"]["quick"]["hit_speedup_p50"] = 12.0
+    assert _gate(tmp_path, SERVE, fresh) == 1
+    fresh = copy.deepcopy(SERVE)
+    fresh["regimes"]["quick"]["legs"]["drift"]["hit_rate"] = 0.3
+    assert _gate(tmp_path, SERVE, fresh) == 1
+    # drift policy must beat never-re-place on end-to-end cost...
+    fresh = copy.deepcopy(SERVE)
+    fresh["regimes"]["quick"]["legs"]["drift"]["end_to_end_cost_ms"] = 9000.0
+    assert _gate(tmp_path, SERVE, fresh) == 1
+    # ...while moving fewer bytes than always-re-place
+    fresh = copy.deepcopy(SERVE)
+    fresh["regimes"]["quick"]["legs"]["drift"]["bytes_moved_gb"] = 40.0
+    assert _gate(tmp_path, SERVE, fresh) == 1
+    fresh = copy.deepcopy(SERVE)
+    fresh["regimes"]["quick"]["determinism"]["zero_drift_identical"] = False
+    assert _gate(tmp_path, SERVE, fresh) == 1
+    # loosened fresh limits must not relax the gate
+    fresh = copy.deepcopy(SERVE)
+    fresh["limits"] = {"hit_speedup_p50": 1.0, "min_hit_rate": 0.0}
+    assert _gate(tmp_path, SERVE, fresh) == 1
+
+
+def test_serve_never_leg_cost_drift_fails(tmp_path):
+    """The one drift-gated b11 cell: the timing-independent never-leg
+    request cost, on config-matched regimes only."""
+    fresh = copy.deepcopy(SERVE)
+    fresh["regimes"]["quick"]["legs"]["never"]["request_cost_mean_ms"] = 22.1
+    assert _gate(tmp_path, SERVE, fresh) == 1
+    assert _gate(tmp_path, SERVE, fresh, extra=("--eval-rtol", "0.1")) == 0
+    # config mismatch: the drift cell is skipped, invariants still gate
+    fresh["regimes"]["quick"]["config"] = {"n_jobs": 2, "n_requests": 10}
+    assert _gate(tmp_path, SERVE, fresh) == 0
+
+
+def test_serve_empty_fresh_refuses_to_pass(tmp_path):
+    """A fresh b11 file with no regimes has no checkable cells beyond
+    the limits pin -- the gate must fail rather than pass vacuously."""
+    fresh = {"benchmark": "b11_serve", "limits": dict(SERVE["limits"]),
+             "regimes": {}}
+    assert _gate(tmp_path, SERVE, fresh) == 1
 
 
 def test_telemetry_overhead_gates_on_fresh_limits(tmp_path):

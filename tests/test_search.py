@@ -340,12 +340,9 @@ def test_cached_oracle_batch_counters(dlrm_pool, rng):
     oracle.evaluate_many(raw, A, 4)
     oracle.evaluate_many(raw, A, 4)
     oracle.evaluate(raw, A[0], 4)              # single path: not batched
-    with pytest.warns(DeprecationWarning):     # forward: telemetry.snapshot
-        info = oracle.info()
-    assert info["batched_calls"] == 2
-    assert info["batched_hits"] == 6 and info["batched_misses"] == 6
-    assert info["batched_hit_rate"] == 0.5
-    assert info["hits"] == 7                   # includes the single hit
+    assert oracle.batched_calls == 2
+    assert oracle.batch_hits == 6 and oracle.batch_misses == 6
+    assert oracle.hits == 7                    # includes the single hit
     assert oracle.last_batch == {"rows": 6, "hits": 6, "misses": 0}
 
 
@@ -358,9 +355,8 @@ def test_search_cache_locality(dlrm_pool):
         sp = SearchPlacer(oracle, config=SearchConfig(
             strategy="lns", budget_ms=None, max_evals=64, seed=0))
         sp.place(task)
-    with pytest.warns(DeprecationWarning):
-        info = oracle.info()
-    assert info["batched_hit_rate"] >= 0.45    # second run all hits
+    batched = oracle.batch_hits + oracle.batch_misses
+    assert oracle.batch_hits / batched >= 0.45  # second run all hits
     assert sp.last_scorer.hardware_evals == 0  # no new hardware measurements
 
 

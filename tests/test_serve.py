@@ -1,0 +1,284 @@
+"""Placement serving: shared digest helpers, the placement cache,
+micro-batch admission, and the drift-triggered re-placement loop."""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.api import (PlacementSession, placement_key, placement_keys,
+                       task_key)
+from repro.api.digest import DIGEST_SIZE
+from repro.core import features as F
+from repro.core.trainer import DreamShard, DreamShardConfig
+from repro.data.tasks import Task, sample_tasks, split_pool
+from repro.data.traffic import TrafficConfig, make_trace
+from repro.serve import (CacheEntry, DriftTracker, MigrationCostOracle,
+                         PlacementCache, PlacementService, ServeConfig,
+                         dist_divergence)
+from repro.sim.costsim import CostSimulator, placement_bytes
+
+
+@pytest.fixture(scope="module")
+def agent(dlrm_pool):
+    train_ids, _ = split_pool(dlrm_pool, seed=0)
+    tasks = sample_tasks(dlrm_pool, train_ids, 12, 4, 2, seed=1)
+    return DreamShard(tasks, CostSimulator(seed=0),
+                      DreamShardConfig(n_iterations=1))
+
+
+class FakeClock:
+    """Deterministic seconds-valued clock for admission tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_ms(self, ms: float) -> None:
+        self.t += ms / 1e3
+
+
+def _dummy_placement(n: int = 4) -> object:
+    return object()   # the cache never looks inside its entries
+
+
+# ---- digest helpers (shared CachedOracle / serving key machinery) ------------
+
+def test_placement_key_matches_legacy_inline(dlrm_pool):
+    """The factored helper reproduces the historical CachedOracle key:
+    blake2b-128 over the canonical ``placement_bytes`` stream."""
+    raw, a = dlrm_pool[:6], np.array([0, 1, 2, 3, 0, 1])
+    legacy = hashlib.blake2b(placement_bytes(raw, a, 4),
+                             digest_size=DIGEST_SIZE).digest()
+    assert placement_key(raw, a, 4) == legacy
+    assert len(legacy) == DIGEST_SIZE
+
+
+def test_placement_keys_bitwise_equals_per_row(dlrm_pool, rng):
+    raw = dlrm_pool[:8]
+    A = rng.integers(0, 4, size=(7, 8))
+    batch = placement_keys(raw, A, 4)
+    single = [placement_key(raw, a, 4) for a in A]
+    assert batch == single
+    assert len(set(batch)) == len({a.tobytes() for a in A})
+
+
+def test_task_key_distribution_policy(dlrm_pool):
+    a = np.array(dlrm_pool[:5], dtype=np.float64)
+    drifted = np.array(a)
+    drifted[:, F.DIST_START:] = np.roll(a[:, F.DIST_START:], 1, axis=-1)
+    # full key separates drifted histograms; structural key unifies them
+    assert task_key(a, 4) != task_key(drifted, 4)
+    assert (task_key(a, 4, include_distribution=False)
+            == task_key(drifted, 4, include_distribution=False))
+    # both flavours still key on structure and device count
+    structural = np.array(a)
+    structural[0, F.DIM] += 1
+    for kw in (dict(), dict(include_distribution=False)):
+        assert task_key(a, 4, **kw) != task_key(a, 2, **kw)
+        assert task_key(a, 4, **kw) != task_key(structural, 4, **kw)
+
+
+# ---- placement cache ---------------------------------------------------------
+
+def test_placement_cache_lru():
+    cache = PlacementCache(max_entries=2)
+    k1, k2, k3 = b"k1", b"k2", b"k3"
+    for k in (k1, k2):
+        assert cache.get(k) is None
+        cache.put(k, CacheEntry(_dummy_placement(), np.zeros((4, 17))))
+    assert cache.get(k1).requests == 1          # k1 becomes most-recent
+    cache.put(k3, CacheEntry(_dummy_placement(), np.zeros((4, 17))))
+    assert cache.get(k1) is not None            # survived: k2 was LRU
+    assert cache.get(k2) is None                # evicted
+    assert (cache.hits, cache.misses, cache.evictions) == (2, 3, 1)
+    assert cache.hit_rate == pytest.approx(2 / 5)
+    assert len(cache) == 2
+
+
+# ---- drift primitives --------------------------------------------------------
+
+def test_dist_divergence_is_max_per_table_tv():
+    p = np.zeros((3, 17))
+    p[:, 0] = 1.0
+    q = np.array(p)
+    assert dist_divergence(p, q) == 0.0
+    q[1, 0], q[1, 1] = 0.8, 0.2                 # table 1 moves 0.2 mass
+    assert dist_divergence(p, q) == pytest.approx(0.2)
+    q[2, 0], q[2, 5] = 0.0, 1.0                 # table 2 moves everything
+    assert dist_divergence(p, q) == pytest.approx(1.0)   # max, not mean
+    assert dist_divergence(q, p) == dist_divergence(p, q)
+
+
+def test_drift_tracker_ewma():
+    d0, d1 = np.zeros((2, 17)), np.ones((2, 17)) / 17.0
+    pinned = DriftTracker(alpha=0.0)
+    pinned.observe(b"k", d0)
+    assert np.array_equal(pinned.observe(b"k", d1), d0)   # never moves
+    latest = DriftTracker(alpha=1.0)
+    latest.observe(b"k", d0)
+    assert np.array_equal(latest.observe(b"k", d1), d1)   # tracks last
+    ewma = DriftTracker(alpha=0.5)
+    assert np.array_equal(ewma.observe(b"k", d0), d0)     # seeded exactly
+    np.testing.assert_allclose(ewma.observe(b"k", d1), 0.5 * d1)
+    assert ewma.estimate(b"missing") is None
+
+
+def test_migration_oracle_penalty(dlrm_pool):
+    raw = dlrm_pool[:6]
+    incumbent = np.array([0, 1, 2, 3, 0, 1])
+    inner = CostSimulator(seed=0)
+    oracle = MigrationCostOracle.wrap(inner, incumbent, ms_per_gb=100.0)
+    # the incumbent pays zero penalty: bitwise-equal to the inner oracle
+    base = inner.evaluate(raw, incumbent, 4)
+    assert oracle.evaluate(raw, incumbent, 4).overall == base.overall
+    # one moved table pays exactly its size x link cost
+    moved = np.array(incumbent)
+    moved[2] = 0
+    expect = (inner.evaluate(raw, moved, 4).overall
+              + 100.0 * float(raw[2, F.TABLE_SIZE_GB]))
+    assert oracle.evaluate(raw, moved, 4).overall == pytest.approx(expect)
+    gb = oracle.migration_gb(raw, np.stack([incumbent, moved]))
+    np.testing.assert_allclose(gb, [0.0, raw[2, F.TABLE_SIZE_GB]])
+    # legality delegates untouched (the penalty is not a memory cost)
+    assert oracle.legal(raw, incumbent, 4)
+    assert oracle.mem_capacity_gb == inner.spec.mem_capacity_gb
+
+
+# ---- micro-batch admission ---------------------------------------------------
+
+def _request(pool, ids, n_devices=4):
+    return np.array(pool[ids], dtype=np.float64), n_devices
+
+
+def test_admission_flushes_on_batch_size(dlrm_pool, agent):
+    clock = FakeClock()
+    svc = PlacementService(agent, clock=clock, config=ServeConfig(
+        max_wait_ms=1e6, max_batch=3))
+    done = []
+    for i in range(2):
+        raw, d = _request(dlrm_pool, range(10 * i, 10 * i + 12))
+        done += svc.submit(raw, d, tag=f"r{i}")
+    assert done == [] and svc.pending == 2      # below batch, below deadline
+    raw, d = _request(dlrm_pool, range(30, 42))
+    done = svc.submit(raw, d, tag="r2")
+    assert [r.tag for r in done] == ["r0", "r1", "r2"]   # batch-size flush
+    assert all(r.source == "decode" for r in done)
+    assert svc.pending == 0 and svc.decode_batches == 1
+    assert svc.stats()["decoded_tasks"] == 3
+
+
+def test_admission_flushes_on_wait_deadline(dlrm_pool, agent):
+    clock = FakeClock()
+    svc = PlacementService(agent, clock=clock, config=ServeConfig(
+        max_wait_ms=5.0, max_batch=64))
+    raw, d = _request(dlrm_pool, range(12))
+    assert svc.submit(raw, d, tag="r0") == []
+    clock.advance_ms(4.0)
+    assert svc.poll() == []                     # deadline not reached
+    clock.advance_ms(2.0)
+    done = svc.poll()                           # 6ms > 5ms: due
+    assert [r.tag for r in done] == ["r0"]
+    assert done[0].queue_wait_ms == pytest.approx(6.0)
+    assert done[0].latency_ms >= done[0].queue_wait_ms
+
+
+def test_admission_coalesces_duplicate_keys(dlrm_pool, agent):
+    clock = FakeClock()
+    svc = PlacementService(agent, clock=clock, config=ServeConfig(
+        max_wait_ms=1e6, max_batch=64))
+    raw, d = _request(dlrm_pool, range(12))
+    svc.submit(raw, d, tag="a")
+    drifted = np.array(raw)
+    drifted[:, F.DIST_START:] = np.roll(raw[:, F.DIST_START:], 1, axis=-1)
+    svc.submit(drifted, d, tag="b")             # same structural key
+    assert svc.pending == 1 and svc.coalesced == 1
+    done = svc.flush()
+    assert sorted(r.tag for r in done) == ["a", "b"]
+    assert svc.decoded_tasks == 1               # ONE decode served both
+    p0, p1 = done[0].placement, done[1].placement
+    assert p0 is p1
+
+
+def test_hits_skip_admission_entirely(dlrm_pool, agent):
+    clock = FakeClock()
+    svc = PlacementService(agent, clock=clock, config=ServeConfig(
+        max_wait_ms=1e6, max_batch=1, drift_threshold=None))
+    raw, d = _request(dlrm_pool, range(12))
+    first = svc.submit(raw, d, tag="cold")
+    assert first[0].source == "decode"          # max_batch=1: instant flush
+    again = svc.submit(raw, d, tag="warm")
+    assert again[0].source == "cache" and again[0].queue_wait_ms == 0.0
+    assert again[0].placement is first[0].placement
+    assert svc.cache.hits == 1 and svc.pending == 0
+
+
+# ---- end-to-end serving ------------------------------------------------------
+
+def _serve_trace(svc, trace):
+    done = []
+    for r in trace:
+        done += svc.submit(r.raw_features, r.n_devices, tag=r.job)
+    done += svc.flush()
+    return done
+
+
+def test_zero_drift_replay_bitwise_identical(dlrm_pool, agent):
+    """A drift-free trace served through the full cache + admission path
+    yields exactly ``PlacementSession.place_many`` placements."""
+    cfg = TrafficConfig(n_jobs=4, n_tables=12, n_devices=4, n_requests=24,
+                        drift=0.0, seed=3)
+    trace = make_trace(dlrm_pool, cfg)
+    svc = PlacementService(agent, config=ServeConfig(
+        max_wait_ms=0.0, max_batch=8, drift_threshold=0.05))
+    done = _serve_trace(svc, trace)
+    assert len(done) == len(trace)
+    assert svc.replace_events == 0              # nothing drifted
+    assert svc.bytes_moved_gb == 0.0
+
+    first = {}
+    for r in trace:
+        first.setdefault(r.job, r)
+    jobs = sorted(first)
+    reference = PlacementSession(agent).place_many(
+        [Task.of(first[j].raw_features, first[j].n_devices) for j in jobs])
+    by_job = {r.tag: r.placement for r in done}
+    for j, ref in zip(jobs, reference):
+        np.testing.assert_array_equal(by_job[j].assignment, ref.assignment)
+        assert by_job[j].n_devices == ref.n_devices
+
+
+def test_drift_triggers_incremental_replacement(dlrm_pool, agent):
+    cfg = TrafficConfig(n_jobs=3, n_tables=12, n_devices=4, n_requests=48,
+                        drift=1.0, zipf=0.0, seed=5)
+    trace = make_trace(dlrm_pool, cfg)
+    svc = PlacementService(agent, config=ServeConfig(
+        max_wait_ms=0.0, max_batch=8, drift_threshold=0.05,
+        ewma_alpha=0.5, replace_max_evals=24))
+    done = _serve_trace(svc, trace)
+    assert svc.replace_events > 0               # the loop fired
+    assert any(r.replaced for r in done if r.source == "cache")
+    # a re-placed entry keeps serving from cache (no key churn)
+    assert svc.cache.hits > 0 and len(svc.cache) == cfg.n_jobs
+    # disabled loop on the same trace: zero replaces, identical hit path
+    off = PlacementService(agent, config=ServeConfig(
+        max_wait_ms=0.0, max_batch=8, drift_threshold=None))
+    _serve_trace(off, trace)
+    assert off.replace_events == 0 and off.bytes_moved_gb == 0.0
+
+
+def test_serve_telemetry_counters(dlrm_pool, agent, telemetry):
+    from repro import telemetry as tele
+    cfg = TrafficConfig(n_jobs=2, n_tables=12, n_devices=4, n_requests=8,
+                        drift=0.0, seed=7)
+    svc = PlacementService(agent, config=ServeConfig(
+        max_wait_ms=0.0, max_batch=4))
+    _serve_trace(svc, make_trace(dlrm_pool, cfg))
+    counters = tele.snapshot()["counters"]
+    assert counters["serve.requests"] == 8
+    assert counters["serve.cache.hits"] == svc.cache.hits > 0
+    assert counters["serve.cache.misses"] == svc.cache.misses
+    assert counters["serve.flushes"] == svc.decode_batches
+    assert counters["serve.decoded"] == svc.decoded_tasks == 2
