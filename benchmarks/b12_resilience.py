@@ -1,0 +1,446 @@
+"""B12: resilient serving -- fault injection, failover, degraded fallbacks.
+
+PR 9 adds the fault-tolerance layer to ``repro.serve``: a deterministic
+``FaultInjector`` schedule (device loss/recovery, transient oracle
+errors, decode-latency spikes), failover re-placement of affected cache
+entries onto the surviving mesh, a deadline-aware decode fallback chain
+(DreamShard -> expert -> greedy-legal), and warm-restart checkpoints.
+This benchmark replays a drifting ``repro.data.traffic`` trace against
+an injected failure schedule and measures what the layer guarantees:
+
+* **faulted leg** -- the full trace with a device lost mid-stream (and
+  recovered later), armed transient oracle errors, and decode spikes
+  that bust the deadline.  Reports the served fraction (every request
+  must complete with a legal placement or a typed ``ServeError`` --
+  zero uncaught exceptions), the degraded-request fraction, recovery
+  latency (the submit that absorbs the loss event, failover sweep
+  included), and recovery bytes moved vs a re-place-from-scratch
+  rebuild of the same affected entries (greedy size-balance on the
+  survivors, no incumbent knowledge);
+* **determinism** -- the same schedule replayed twice (the service on a
+  virtual clock, so admission timing is part of the replayed state)
+  must serve bitwise-identical assignments with identical provenance;
+* **warm restart** -- the run checkpointed mid-outage
+  (``PlacementService.save``) and resumed in a fresh service must match
+  the uninterrupted run's assignments exactly.
+
+Writes ``BENCH_resilience.json`` (committed at the repo root); the
+``check_resilience`` gate pins the acceptance criteria: served fraction
+1.0, recovery moving <= ``max_recovery_ratio`` of the scratch-rebuild
+bytes, deterministic replay, and warm-restart identity.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common as C                             # noqa: E402
+from repro.api import ensure_oracle                            # noqa: E402
+from repro.core import features as F                           # noqa: E402
+from repro.core.baselines import expert_place                  # noqa: E402
+from repro.core.trainer import DreamShardConfig                # noqa: E402
+from repro.data.tasks import sample_tasks, split_pool          # noqa: E402
+from repro.data.traffic import TrafficConfig, make_trace       # noqa: E402
+from repro.serve import (FaultEvent, FaultInjector,            # noqa: E402
+                         FaultSchedule, PlacementService, ServeConfig)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# acceptance limits, committed with the baseline (the gate re-proves
+# them on every fresh run and refuses silent relaxation)
+LIMITS = {"max_recovery_ratio": 0.25, "min_served": 1.0}
+
+# fixed per-regime configs: smoke runs the quick regime at its FULL
+# config, so the check_bench gate always has comparable cells.  The
+# 8-device mesh matters: losing one device strands ~1/8 of placed
+# bytes, so minimal-movement recovery can genuinely beat the
+# <=25%-of-scratch bound (on a 4-device mesh the stranded share alone
+# is ~25% -- no recovery can win)
+REGIMES = {
+    "quick": {
+        "dataset": "DLRM", "n_jobs": 6, "n_tables": 16, "n_devices": 8,
+        "n_requests": 400, "drift": 0.8, "zipf": 1.0, "tail_jobs": 4,
+        "trainer": "reduced", "max_wait_ms": 2.0, "max_batch": 8,
+        "ewma_alpha": 0.3, "drift_threshold": 0.05,
+        "migration_ms_per_gb": 25.0, "replace_max_evals": 64,
+        "failover_max_evals": 64, "decode_deadline_ms": 25.0,
+        "oracle_retries": 2, "seed": 0,
+        # the failure schedule (request indices; committed so the gate
+        # can prove the replay deterministic against the same faults)
+        "loss_device": 1, "loss_at": 200, "recover_at": 320,
+        "oracle_error_at": [120, 240], "oracle_error_count": 2,
+        "spike_at": [80, 360], "spike_ms": 50.0,
+        "checkpoint_at": 260,
+    },
+    "paper": {
+        "dataset": "DLRM", "n_jobs": 12, "n_tables": 50, "n_devices": 8,
+        "n_requests": 1500, "drift": 0.8, "zipf": 1.0, "tail_jobs": 8,
+        "trainer": "paper", "max_wait_ms": 2.0, "max_batch": 8,
+        "ewma_alpha": 0.3, "drift_threshold": 0.05,
+        "migration_ms_per_gb": 25.0, "replace_max_evals": 96,
+        "failover_max_evals": 96, "decode_deadline_ms": 25.0,
+        "oracle_retries": 2, "seed": 0,
+        "loss_device": 1, "loss_at": 750, "recover_at": 1200,
+        "oracle_error_at": [400, 900], "oracle_error_count": 2,
+        "spike_at": [300, 1350], "spike_ms": 50.0,
+        "checkpoint_at": 1000,
+    },
+}
+
+
+def _trainer_cfg(kind: str) -> DreamShardConfig:
+    if kind == "paper":
+        return DreamShardConfig()
+    return DreamShardConfig(n_iterations=3, n_collect=6, n_cost=100,
+                            n_batch=32, n_rl=5, n_episode=10,
+                            inference_candidates=8)
+
+
+def _serve_cfg(spec: dict) -> ServeConfig:
+    return ServeConfig(
+        max_wait_ms=spec["max_wait_ms"], max_batch=spec["max_batch"],
+        ewma_alpha=spec["ewma_alpha"],
+        drift_threshold=spec["drift_threshold"],
+        migration_ms_per_gb=spec["migration_ms_per_gb"],
+        replace_max_evals=spec["replace_max_evals"],
+        failover_max_evals=spec["failover_max_evals"],
+        decode_deadline_ms=spec["decode_deadline_ms"],
+        oracle_retries=spec["oracle_retries"], seed=spec["seed"])
+
+
+def _schedule(spec: dict) -> FaultSchedule:
+    events = [FaultEvent(at=spec["loss_at"], kind="device_loss",
+                         device=spec["loss_device"]),
+              FaultEvent(at=spec["recover_at"], kind="device_recovery",
+                         device=spec["loss_device"])]
+    for at in spec["oracle_error_at"]:
+        events.append(FaultEvent(at=at, kind="oracle_error",
+                                 count=spec["oracle_error_count"]))
+    for at in spec["spike_at"]:
+        events.append(FaultEvent(at=at, kind="decode_spike",
+                                 spike_ms=spec["spike_ms"]))
+    return FaultSchedule(tuple(events))
+
+
+class _VirtualClock:
+    """Deterministic time source for the service: one fixed quantum per
+    request, so admission flush/coalesce decisions (and therefore drift
+    re-place trigger points) replay bitwise across legs.  Wall-clock
+    measurements (recovery latency, throughput) still use
+    ``time.perf_counter`` in the harness."""
+
+    STEP_MS = 1.0
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self) -> None:
+        self.t += self.STEP_MS / 1e3
+
+
+def _scratch_rebuild_gb(svc, lost_device: int, capacity_gb: float) -> dict:
+    """What a no-incumbent rebuild of the affected entries would move:
+    every cached placement touching the lost device re-placed from
+    scratch (greedy size-balance over the survivors), bytes counted
+    against the incumbent it replaces."""
+    scratch_gb, total_gb, affected = 0.0, 0.0, 0
+    for _, e in svc.cache.items():
+        a = e.placement.assignment
+        if not (a == lost_device).any() or e.raw is None:
+            continue
+        affected += 1
+        D = e.placement.n_devices
+        survivors = np.array([d for d in range(D) if d != lost_device])
+        sizes = e.raw[:, F.TABLE_SIZE_GB]
+        compressed = expert_place(e.raw, survivors.size, capacity_gb,
+                                  "size")
+        rebuilt = survivors[compressed]
+        scratch_gb += float(((rebuilt != a) * sizes).sum())
+        total_gb += float(sizes.sum())
+    return {"affected_entries": affected,
+            "scratch_bytes_gb": round(scratch_gb, 4),
+            "affected_total_gb": round(total_gb, 4)}
+
+
+def _replay(agent, oracle, trace, spec: dict,
+            checkpoint_dir: str | None = None) -> dict:
+    """One faulted replay -> completed results (with completion index),
+    fault/recovery measurements, and the service's final stats.  The
+    service runs on a ``_VirtualClock`` so every leg sees identical
+    admission timing.  With ``checkpoint_dir`` the service is
+    checkpointed at ``checkpoint_at`` requests (queued tickets
+    included -- no drain), torn down, and warm-restarted for the rest
+    of the trace."""
+    clock = _VirtualClock()
+    faults = FaultInjector(_schedule(spec))
+    svc = PlacementService(agent, oracle=oracle, config=_serve_cfg(spec),
+                           faults=faults, clock=clock)
+    completed: list[tuple[int, object]] = []   # (completion index, result)
+    uncaught = 0
+    recovery_latency_ms = None
+    scratch = None
+    t0 = time.perf_counter()
+    for i, r in enumerate(trace):
+        if checkpoint_dir is not None and i == spec["checkpoint_at"]:
+            svc.save(checkpoint_dir)
+            faults = FaultInjector(_schedule(spec))
+            svc = PlacementService.restore(
+                checkpoint_dir, agent=agent, oracle=oracle,
+                config=_serve_cfg(spec), faults=faults, clock=clock)
+        clock.tick()
+        if i == spec["loss_at"]:
+            # the loss event fires inside this submit; snapshot the
+            # incumbents first so the scratch comparator sees the same
+            # affected set the failover sweep does
+            scratch = _scratch_rebuild_gb(svc, spec["loss_device"],
+                                          svc.oracle.mem_capacity_gb)
+            t_loss = time.perf_counter()
+        try:
+            out = svc.submit(r.raw_features, r.n_devices, tag=i)
+        except Exception:
+            uncaught += 1
+            out = []
+        if i == spec["loss_at"]:
+            recovery_latency_ms = (time.perf_counter() - t_loss) * 1e3
+        for res in out:
+            completed.append((i, res))
+    for res in svc.flush():
+        completed.append((len(trace), res))
+    wall = time.perf_counter() - t0
+    return {"completed": completed, "uncaught": uncaught,
+            "recovery_latency_ms": recovery_latency_ms,
+            "scratch": scratch, "stats": svc.stats(), "wall_s": wall}
+
+
+def _legal(oracle, trace, res) -> bool:
+    r = trace[res.tag]
+    return bool(oracle.legal(r.raw_features, res.placement.assignment,
+                             r.n_devices))
+
+
+def _faulted_leg(oracle, trace, spec: dict, run: dict) -> dict:
+    completed, stats = run["completed"], run["stats"]
+    n = len(trace)
+    by_source: dict[str, int] = {}
+    degraded = 0
+    illegal = 0
+    outage_on_lost = 0
+    for at, res in completed:
+        by_source[res.source] = by_source.get(res.source, 0) + 1
+        if res.degraded is not None or res.source in ("fallback", "error"):
+            degraded += 1
+        if res.placement is not None:
+            if not _legal(oracle, trace, res):
+                illegal += 1
+            if spec["loss_at"] <= at < spec["recover_at"] and \
+                    (res.placement.assignment == spec["loss_device"]).any():
+                outage_on_lost += 1
+    served = sum(1 for _, r in completed
+                 if r.placement is not None or r.error is not None)
+    scratch = run["scratch"]
+    recovery_gb = stats["failover_bytes_gb"]
+    ratio = (recovery_gb / scratch["scratch_bytes_gb"]
+             if scratch and scratch["scratch_bytes_gb"] > 0 else None)
+    return {
+        "requests": n,
+        "served": served,
+        "served_fraction": round(served / n, 4),
+        "uncaught_exceptions": run["uncaught"],
+        "illegal_placements": illegal,
+        "outage_on_lost": outage_on_lost,
+        "by_source": by_source,
+        "degraded_requests": degraded,
+        "degraded_fraction": round(degraded / n, 4),
+        "typed_errors": stats["typed_errors"],
+        "recovery": {
+            **(scratch or {}),
+            "recovery_latency_ms": round(run["recovery_latency_ms"], 2),
+            "recovery_bytes_gb": round(recovery_gb, 4),
+            "recovery_ratio": round(ratio, 4) if ratio is not None
+            else None,
+        },
+        "evacuations": stats["evacuations"],
+        "evacuation_failures": stats["evacuation_failures"],
+        "fallbacks": stats["fallbacks"],
+        "repairs": stats["repairs"],
+        "deadline_skips": stats["deadline_skips"],
+        "retries": stats["retries"],
+        "retry_exhausted": stats["retry_exhausted"],
+        "invalidations": stats["invalidations"],
+        # ledger values are in virtual-clock ms (1 ms/request quantum)
+        "latency_virtual": {k: (round(v, 4) if v == v else None)
+                            for k, v in stats["latency"].items()},
+        "wall_s": round(run["wall_s"], 2),
+        "requests_per_s": round(n / run["wall_s"], 1),
+    }
+
+
+def _same_serving(a: list, b: list) -> bool:
+    """Two completed-result streams serve identically: same per-tag
+    assignments, provenance, and typed-error codes."""
+    if len(a) != len(b):
+        return False
+    by_tag_a = {res.tag: res for _, res in a}
+    by_tag_b = {res.tag: res for _, res in b}
+    if set(by_tag_a) != set(by_tag_b):
+        return False
+    for tag, ra in by_tag_a.items():
+        rb = by_tag_b[tag]
+        if (ra.placement is None) != (rb.placement is None):
+            return False
+        if ra.placement is not None and not np.array_equal(
+                ra.placement.assignment, rb.placement.assignment):
+            return False
+        if (ra.error.code if ra.error else None) != \
+                (rb.error.code if rb.error else None):
+            return False
+    return True
+
+
+def _run_regime(name: str, spec: dict, workdir: str) -> dict:
+    pool = C.get_pool(spec["dataset"])
+    sim = C.get_sim(spec["dataset"])
+    oracle = ensure_oracle(sim)
+    train_ids, _ = split_pool(pool, seed=0)
+    train = sample_tasks(pool, train_ids, spec["n_tables"],
+                         spec["n_devices"], 8, seed=0, name="resil-train")
+    with C.Timer() as t_train:
+        agent = C.train_dreamshard(train, sim, _trainer_cfg(spec["trainer"]))
+
+    cfg = TrafficConfig(n_jobs=spec["n_jobs"], n_tables=spec["n_tables"],
+                        n_devices=spec["n_devices"],
+                        n_requests=spec["n_requests"], drift=spec["drift"],
+                        zipf=spec["zipf"], tail_jobs=spec["tail_jobs"],
+                        seed=spec["seed"])
+    trace = make_trace(pool, cfg)
+
+    run1 = _replay(agent, oracle, trace, spec)
+    faulted = _faulted_leg(oracle, trace, spec, run1)
+    print({"regime": name, "served_fraction": faulted["served_fraction"],
+           "recovery_ratio": faulted["recovery"]["recovery_ratio"],
+           "degraded_fraction": faulted["degraded_fraction"]}, flush=True)
+
+    # same schedule replayed twice: provenance and assignments bitwise
+    run2 = _replay(agent, oracle, trace, spec)
+    deterministic = _same_serving(run1["completed"], run2["completed"])
+
+    # checkpoint mid-outage, restore into a fresh service, finish the
+    # trace: must serve what the uninterrupted replay served
+    ckpt = os.path.join(workdir, f"b12_ckpt_{name}")
+    warm = _replay(agent, oracle, trace, spec, checkpoint_dir=ckpt)
+    warm_identical = _same_serving(run1["completed"], warm["completed"])
+
+    row = {
+        "config": spec,
+        "train_s": round(t_train.s, 1),
+        "faulted": faulted,
+        "determinism": {"deterministic_replay": bool(deterministic)},
+        "warm_restart": {"checkpoint_at": spec["checkpoint_at"],
+                         "warm_restart_identical": bool(warm_identical)},
+        "schedule": json.loads(_schedule(spec).to_json()),
+    }
+    print({"regime": name, "deterministic_replay": deterministic,
+           "warm_restart_identical": warm_identical}, flush=True)
+    return row
+
+
+def run(smoke: bool = False, out: str | None = None,
+        regimes: list[str] | None = None):
+    selected = ["quick"] if smoke else list(REGIMES)
+    if regimes:
+        selected = [r for r in selected if r in regimes] or \
+            [r for r in REGIMES if r in regimes]
+        if not selected:
+            raise SystemExit(f"no such regime(s) {regimes}")
+
+    result = {
+        "benchmark": "b12_resilience",
+        "schema": 1,
+        "mode": "smoke" if smoke else "full",
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"cpu_count": os.cpu_count(), "numpy": np.__version__},
+        "limits": dict(LIMITS),
+        "regimes": {},
+    }
+    import tempfile
+    with tempfile.TemporaryDirectory() as workdir:
+        for name in selected:
+            result["regimes"][name] = _run_regime(name, REGIMES[name],
+                                                  workdir)
+
+    head_name = "paper" if "paper" in result["regimes"] \
+        else next(iter(result["regimes"]))
+    reg = result["regimes"][head_name]
+    result["headline"] = {
+        "regime": head_name,
+        "served_fraction": reg["faulted"]["served_fraction"],
+        "uncaught_exceptions": reg["faulted"]["uncaught_exceptions"],
+        "degraded_fraction": reg["faulted"]["degraded_fraction"],
+        "recovery_ratio": reg["faulted"]["recovery"]["recovery_ratio"],
+        "recovery_latency_ms":
+            reg["faulted"]["recovery"]["recovery_latency_ms"],
+        "recovery_bytes_gb":
+            reg["faulted"]["recovery"]["recovery_bytes_gb"],
+        "scratch_bytes_gb":
+            reg["faulted"]["recovery"]["scratch_bytes_gb"],
+        "deterministic_replay":
+            reg["determinism"]["deterministic_replay"],
+        "warm_restart_identical":
+            reg["warm_restart"]["warm_restart_identical"],
+    }
+    if not smoke:
+        # the PR's acceptance criteria, asserted at the source
+        for name in result["regimes"]:
+            f = result["regimes"][name]["faulted"]
+            assert f["served_fraction"] >= LIMITS["min_served"], \
+                f"{name}: not every request was served"
+            assert f["uncaught_exceptions"] == 0, \
+                f"{name}: an exception escaped submit()"
+            assert f["illegal_placements"] == 0, \
+                f"{name}: an illegal placement was served"
+            assert f["outage_on_lost"] == 0, \
+                f"{name}: a placement touched the lost device mid-outage"
+            assert f["recovery"]["recovery_ratio"] <= \
+                LIMITS["max_recovery_ratio"], \
+                f"{name}: failover moved more than " \
+                f"{LIMITS['max_recovery_ratio']:.0%} of scratch bytes"
+            assert result["regimes"][name]["determinism"][
+                "deterministic_replay"], f"{name}: replay diverged"
+            assert result["regimes"][name]["warm_restart"][
+                "warm_restart_identical"], f"{name}: warm restart diverged"
+    out = out or os.path.join(ROOT, "BENCH_resilience.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print({"headline": result["headline"], "written": os.path.abspath(out)},
+          flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick regime only (same config as full: the "
+                         "bench gate stays comparable)")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--regimes", default=None,
+                    help="comma-separated regime subset (quick, paper)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and export a trace on exit "
+                         "(.jsonl -> event log, else Chrome trace JSON)")
+    args = ap.parse_args()
+    from repro import telemetry as tele
+    with tele.trace_to(args.trace):
+        run(smoke=args.smoke, out=args.out,
+            regimes=args.regimes.split(",") if args.regimes else None)

@@ -300,6 +300,68 @@ def check_serve(gate: Gate, baseline: dict, fresh: dict) -> None:
         )
 
 
+def check_resilience(gate: Gate, baseline: dict, fresh: dict) -> None:
+    """b12: the resilience acceptance criteria are host-independent
+    invariants, re-proven on the FRESH run every leg (served fraction,
+    legality, recovery-vs-scratch bytes, deterministic replay, warm
+    restart); the committed baseline pins the limits so they cannot be
+    silently relaxed."""
+    limits = fresh.get("limits", {})
+    max_ratio = limits.get("max_recovery_ratio", 0.25)
+    min_served = limits.get("min_served", 1.0)
+    gate.invariant(
+        "b12.fresh_has_regimes",
+        bool(fresh.get("regimes")),
+        f"fresh regimes measured: {sorted(fresh.get('regimes', {}))}",
+    )
+    for name, reg in fresh.get("regimes", {}).items():
+        f, rec = reg["faulted"], reg["faulted"]["recovery"]
+        gate.invariant(
+            f"b12.{name}.every_request_served",
+            f["served_fraction"] >= min_served
+            and f["uncaught_exceptions"] == 0,
+            f"served {f['served']}/{f['requests']}, "
+            f"{f['uncaught_exceptions']} uncaught exception(s)",
+        )
+        gate.invariant(
+            f"b12.{name}.no_illegal_placements",
+            f["illegal_placements"] == 0 and f["outage_on_lost"] == 0,
+            f"{f['illegal_placements']} illegal, {f['outage_on_lost']} "
+            "served on the lost device mid-outage",
+        )
+        gate.invariant(
+            f"b12.{name}.failover_exercised",
+            rec.get("affected_entries", 0) > 0 and f["evacuations"] > 0,
+            f"{rec.get('affected_entries')} entries affected by the "
+            f"loss, {f['evacuations']} evacuated",
+        )
+        gate.invariant(
+            f"b12.{name}.recovery_under_{max_ratio}_of_scratch",
+            rec["recovery_ratio"] is not None
+            and rec["recovery_ratio"] <= max_ratio,
+            f"failover moved {rec['recovery_bytes_gb']} GB vs scratch "
+            f"rebuild {rec['scratch_bytes_gb']} GB "
+            f"(ratio {rec['recovery_ratio']}, limit {max_ratio})",
+        )
+        gate.invariant(
+            f"b12.{name}.deterministic_replay",
+            reg["determinism"]["deterministic_replay"],
+            f"schedule replayed twice: {reg['determinism']}",
+        )
+        gate.invariant(
+            f"b12.{name}.warm_restart_identical",
+            reg["warm_restart"]["warm_restart_identical"],
+            f"checkpoint at {reg['warm_restart']['checkpoint_at']} "
+            "requests, restored leg vs uninterrupted run",
+        )
+    gate.invariant(
+        "b12.limits_match_baseline",
+        baseline.get("limits") == fresh.get("limits"),
+        f"baseline limits {baseline.get('limits')} vs fresh "
+        f"{fresh.get('limits')}",
+    )
+
+
 CHECKERS = {
     "b6_train_throughput": check_train,
     "b7_oracle_throughput": check_oracle,
@@ -307,6 +369,7 @@ CHECKERS = {
     "b9_search": check_search,
     "b10_telemetry_overhead": check_telemetry,
     "b11_serve": check_serve,
+    "b12_resilience": check_resilience,
 }
 
 

@@ -33,6 +33,7 @@ MODULES = [
     "b9_search",              # search-augmented placement anytime curves
     "b10_telemetry_overhead",  # telemetry off-path / enabled overhead bounds
     "b11_serve",              # placement serving: cache, admission, drift
+    "b12_resilience",         # fault injection, failover, degraded serving
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

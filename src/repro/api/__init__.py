@@ -21,7 +21,9 @@ One interface over every placement strategy and cost backend:
   through the batched oracle;
 * ``PlacementService`` / ``ServeConfig`` (re-exported lazily from
   ``repro.serve``) -- long-running serving: digest-keyed placement
-  cache, micro-batch admission, drift-triggered re-placement;
+  cache, micro-batch admission, drift-triggered re-placement, plus the
+  fault layer (``FaultInjector`` / ``FaultSchedule``, typed
+  ``ServeError`` results, failover and warm-restart checkpoints);
 * blake2b digest helpers (``placement_key`` / ``placement_keys`` /
   ``task_key``) shared by ``CachedOracle`` and the serving cache.
 
@@ -43,18 +45,23 @@ from repro.api.session import PlacementSession
 # repro.search / repro.serve import from repro.api, so their names are
 # re-exported lazily (PEP 562) to keep `import repro.api` cycle-free
 _SEARCH_EXPORTS = ("SearchConfig", "SearchPlacer", "SearchScorer")
-_SERVE_EXPORTS = ("PlacementCache", "PlacementService", "ServeConfig",
-                  "ServeResult")
+_SERVE_EXPORTS = ("CapacityError", "DecodeTimeout", "FaultEvent",
+                  "FaultInjector", "FaultSchedule", "IllegalTaskError",
+                  "PlacementCache", "PlacementService", "ServeConfig",
+                  "ServeError", "ServeResult", "TransientOracleError")
 
 __all__ = [
-    "BasePlacer", "CachedOracle", "CostOracle", "DreamShardPlacer",
-    "ExpertPlacer", "KernelOracle", "MeasuredOracle", "Placement",
-    "PlacementCache", "PlacementService", "PlacementSession", "Placer",
-    "PortfolioPlacer", "RNNPlacerAdapter", "RandomPlacer", "SearchConfig",
-    "SearchPlacer", "SearchScorer", "ServeConfig", "ServeResult",
-    "SimOracle", "ensure_oracle", "evaluate_many", "evaluate_placements",
-    "evaluate_placer", "legal_batch", "make_baseline_placers",
-    "measure_placements", "placement_key", "placement_keys", "task_key",
+    "BasePlacer", "CachedOracle", "CapacityError", "CostOracle",
+    "DecodeTimeout", "DreamShardPlacer", "ExpertPlacer", "FaultEvent",
+    "FaultInjector", "FaultSchedule", "IllegalTaskError", "KernelOracle",
+    "MeasuredOracle", "Placement", "PlacementCache", "PlacementService",
+    "PlacementSession", "Placer", "PortfolioPlacer", "RNNPlacerAdapter",
+    "RandomPlacer", "SearchConfig", "SearchPlacer", "SearchScorer",
+    "ServeConfig", "ServeError", "ServeResult", "SimOracle",
+    "TransientOracleError", "ensure_oracle", "evaluate_many",
+    "evaluate_placements", "evaluate_placer", "legal_batch",
+    "make_baseline_placers", "measure_placements", "placement_key",
+    "placement_keys", "task_key",
 ]
 
 

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import save_pytree, restore_pytree  # noqa: F401
+from repro.checkpoint.io import (STATE_VERSION, load_state,  # noqa: F401
+                                 restore_pytree, save_pytree, save_state)

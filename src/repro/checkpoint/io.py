@@ -52,3 +52,42 @@ def restore_pytree(template, path: str):
             arr = arr.view(jnp.bfloat16)
         leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---- versioned state envelopes (service crash recovery) ----------------------
+
+STATE_VERSION = 1
+
+
+def save_state(path: str, arrays: dict, meta: dict):
+    """Versioned state checkpoint: named numpy arrays + a JSON metadata
+    envelope.  Unlike ``save_pytree`` (template-shaped restore of jax
+    parameters), this is for *service* state -- heterogeneous arrays
+    plus arbitrary JSON-serializable metadata -- and ``load_state``
+    refuses envelopes written by a future format version instead of
+    misreading them.
+    """
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "state.npz"),
+             **{k: np.asarray(v) for k, v in arrays.items()})
+    envelope = {"state_version": STATE_VERSION, "meta": meta}
+    with open(os.path.join(path, "state.json"), "w") as fh:
+        json.dump(envelope, fh)
+
+
+def load_state(path: str) -> tuple[dict, dict]:
+    """Load a ``save_state`` checkpoint -> ``(arrays, meta)``.
+
+    Raises ``ValueError`` on an unknown ``state_version`` -- a crashed
+    process must not warm-restart from a checkpoint it cannot decode.
+    """
+    with open(os.path.join(path, "state.json")) as fh:
+        envelope = json.load(fh)
+    version = envelope.get("state_version")
+    if version != STATE_VERSION:
+        raise ValueError(
+            f"unsupported state checkpoint version {version!r} "
+            f"(this build reads version {STATE_VERSION})")
+    with np.load(os.path.join(path, "state.npz")) as data:
+        arrays = {k: np.array(data[k]) for k in data.files}
+    return arrays, envelope["meta"]

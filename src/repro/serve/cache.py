@@ -30,6 +30,8 @@ class CacheEntry:
     snapshot: np.ndarray    # (M, 17) access histograms at placement time
     requests: int = 0       # requests served from this entry
     replaces: int = 0       # drift-triggered re-placements applied
+    raw: np.ndarray | None = None   # (M, 21) features at placement time
+                                    # (failover re-places from these)
 
 
 class PlacementCache:
@@ -47,6 +49,7 @@ class PlacementCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
         self._entries: dict[bytes, CacheEntry] = {}
 
     def __len__(self) -> int:
@@ -77,6 +80,39 @@ class PlacementCache:
     def entries(self) -> list[CacheEntry]:
         """Live entries in LRU -> MRU order (a snapshot, not a view)."""
         return list(self._entries.values())
+
+    def items(self) -> list[tuple[bytes, CacheEntry]]:
+        """(key, entry) pairs in LRU -> MRU order (a snapshot)."""
+        return list(self._entries.items())
+
+    def invalidate(self, predicate) -> int:
+        """Drop every entry where ``predicate(key, entry)`` is true.
+
+        Surviving entries keep their relative LRU order; dropped entries
+        count as invalidations (NOT evictions -- they were removed for
+        correctness, not capacity) and leave hit/miss counters untouched.
+        Returns the number of entries dropped.
+        """
+        doomed = [k for k, e in self._entries.items() if predicate(k, e)]
+        for k in doomed:
+            del self._entries[k]
+        self.invalidations += len(doomed)
+        if doomed:
+            tele.count("serve.cache.invalidations", len(doomed))
+        return len(doomed)
+
+    def invalidate_devices(self, lost) -> int:
+        """Drop entries whose placement touches any device in ``lost``
+        (the device-loss failover sweep).  Returns the count dropped."""
+        lost = set(int(d) for d in lost)
+        if not lost:
+            return 0
+
+        def touches(key, entry):
+            return bool(np.isin(entry.placement.assignment,
+                                sorted(lost)).any())
+
+        return self.invalidate(touches)
 
     @property
     def hit_rate(self) -> float:

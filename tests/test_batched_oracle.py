@@ -218,6 +218,73 @@ def test_evaluate_many_helper_falls_back_to_loop(dlrm_pool, rng):
         ok, [CostSimulator(seed=0).legal(raw, a, 2) for a in A])
 
 
+# ---- legality edge cases (degraded / extreme meshes) --------------------------
+
+ALL_ORACLES = ["sim", "cached", "measured", "kernel"]
+
+
+def _capacity_oracles(capacity_gb):
+    import dataclasses
+
+    from repro.sim.hardware import PAPER_GPU
+    spec = dataclasses.replace(PAPER_GPU, mem_capacity_gb=capacity_gb)
+    table = CalibrationTable.synthetic()
+    return {
+        "sim": SimOracle(CostSimulator(spec=spec, seed=0)),
+        "cached": CachedOracle(CostSimulator(spec=spec, seed=0)),
+        "measured": MeasuredOracle(table, mem_capacity_gb=capacity_gb),
+        "kernel": KernelOracle(spec=spec, table=table),
+    }
+
+
+@pytest.mark.parametrize("name", ALL_ORACLES)
+def test_legal_batch_zero_surviving_capacity(dlrm_pool, name):
+    """A mesh with no memory at all admits nothing -- reported illegal,
+    never raised, on every oracle."""
+    oracle = _capacity_oracles(0.0)[name]
+    assert oracle.mem_capacity_gb == 0.0
+    raw = dlrm_pool[:4]                   # real tables: positive sizes
+    A = np.array([[0, 1, 2, 3], [0, 0, 0, 0]])
+    assert not legal_batch(oracle, raw, A, 4).any()
+    assert not oracle.legal(raw, A[0], 4)
+
+
+@pytest.mark.parametrize("name", ALL_ORACLES)
+def test_legal_batch_single_device_mesh(dlrm_pool, name):
+    """D=1: legality degenerates to total-size-fits, and the only legal
+    device id is 0."""
+    oracle = _oracles(dlrm_pool)[name]
+    cap = oracle.mem_capacity_gb
+    raw = np.array(dlrm_pool[:3], dtype=np.float64)
+    raw[:, F.TABLE_SIZE_GB] = cap / 4.0
+    zeros = np.zeros(3, dtype=np.int64)
+    assert legal_batch(oracle, raw, zeros[None, :], 1)[0]
+    off_mesh = np.array([0, 1, 0])
+    assert not legal_batch(oracle, raw, off_mesh[None, :], 1)[0]
+    raw[:, F.TABLE_SIZE_GB] = 0.6 * cap   # 1.8x capacity in total
+    assert not legal_batch(oracle, raw, zeros[None, :], 1)[0]
+
+
+@pytest.mark.parametrize("name", ALL_ORACLES)
+def test_degraded_wrap_rejects_tables_on_lost_device(dlrm_pool, name):
+    """Every oracle wrapped in ``DegradedMeshOracle``: a placement whose
+    tables all sit on the lost device fits by memory alone but must be
+    illegal on the degraded mesh."""
+    from repro.serve import DegradedMeshOracle
+    oracle = _oracles(dlrm_pool)[name]
+    raw = np.array(dlrm_pool[:4], dtype=np.float64)
+    raw[:, F.TABLE_SIZE_GB] = oracle.mem_capacity_gb / 8.0
+    degraded = DegradedMeshOracle(oracle,
+                                  np.array([True, False, True, True]))
+    on_lost = np.full(4, 1, dtype=np.int64)
+    survivors = np.full(4, 2, dtype=np.int64)
+    assert legal_batch(oracle, raw, on_lost[None, :], 4)[0]
+    np.testing.assert_array_equal(
+        degraded.legal_batch(raw, np.stack([on_lost, survivors]), 4),
+        [False, True])
+    assert not degraded.legal(raw, on_lost, 4)
+
+
 # ---- grouped placement measurement --------------------------------------------
 
 

@@ -76,6 +76,28 @@ SERVE = {
 }
 
 
+RESILIENCE = {
+    "benchmark": "b12_resilience",
+    "limits": {"max_recovery_ratio": 0.25, "min_served": 1.0},
+    "regimes": {"quick": {
+        "config": {"n_jobs": 6, "n_requests": 400, "loss_device": 1},
+        "faulted": {
+            "requests": 404, "served": 404, "served_fraction": 1.0,
+            "uncaught_exceptions": 0, "illegal_placements": 0,
+            "outage_on_lost": 0, "evacuations": 6,
+            "recovery": {"affected_entries": 6,
+                         "scratch_bytes_gb": 4.55,
+                         "recovery_bytes_gb": 0.69,
+                         "recovery_ratio": 0.152,
+                         "recovery_latency_ms": 23.7},
+        },
+        "determinism": {"deterministic_replay": True},
+        "warm_restart": {"checkpoint_at": 260,
+                         "warm_restart_identical": True},
+    }},
+}
+
+
 def _gate(tmp_path, baseline, fresh, extra=()):
     b = tmp_path / "baseline.json"
     f = tmp_path / "fresh.json"
@@ -84,7 +106,8 @@ def _gate(tmp_path, baseline, fresh, extra=()):
     return check_bench.main(["--pair", str(b), str(f), *extra])
 
 
-@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION, TELEMETRY, SERVE])
+@pytest.mark.parametrize("doc", [TRAIN, ORACLE, FUSION, TELEMETRY, SERVE,
+                                 RESILIENCE])
 def test_identical_runs_pass(tmp_path, doc):
     assert _gate(tmp_path, doc, copy.deepcopy(doc)) == 0
 
@@ -186,6 +209,46 @@ def test_serve_empty_fresh_refuses_to_pass(tmp_path):
     fresh = {"benchmark": "b11_serve", "limits": dict(SERVE["limits"]),
              "regimes": {}}
     assert _gate(tmp_path, SERVE, fresh) == 1
+
+
+def test_resilience_invariants_gate_on_fresh(tmp_path):
+    """b12 gates the FRESH run's acceptance criteria: full service under
+    faults, recovery bytes under the scratch ratio, deterministic
+    replay, and warm-restart identity."""
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["faulted"]["served_fraction"] = 0.99
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["faulted"]["uncaught_exceptions"] = 1
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["faulted"]["illegal_placements"] = 2
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["faulted"]["recovery"]["recovery_ratio"] = 0.3
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["determinism"]["deterministic_replay"] = False
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["warm_restart"]["warm_restart_identical"] = \
+        False
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    # a run where the loss never touched the cache proves nothing
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["regimes"]["quick"]["faulted"]["recovery"]["affected_entries"] = 0
+    fresh["regimes"]["quick"]["faulted"]["evacuations"] = 0
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+    # loosened fresh limits must not relax the gate
+    fresh = copy.deepcopy(RESILIENCE)
+    fresh["limits"] = {"max_recovery_ratio": 0.9, "min_served": 0.5}
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
+
+
+def test_resilience_empty_fresh_refuses_to_pass(tmp_path):
+    fresh = {"benchmark": "b12_resilience",
+             "limits": dict(RESILIENCE["limits"]), "regimes": {}}
+    assert _gate(tmp_path, RESILIENCE, fresh) == 1
 
 
 def test_telemetry_overhead_gates_on_fresh_limits(tmp_path):

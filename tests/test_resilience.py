@@ -1,0 +1,467 @@
+"""Resilient serving: fault schedules/injection, degraded-mesh repair,
+typed serve errors, failover re-placement, fallback chain, latency
+ledger, and warm-restart checkpoints."""
+
+import dataclasses
+import json
+import os
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.core import features as F
+from repro.core.trainer import DreamShard, DreamShardConfig
+from repro.data.tasks import sample_tasks, split_pool
+from repro.data.traffic import TrafficConfig, make_trace
+from repro.serve import (CacheEntry, CapacityError, DecodeTimeout,
+                         DegradedMeshOracle, FaultEvent, FaultInjector,
+                         FaultSchedule, FaultyOracle, IllegalTaskError,
+                         LatencyReservoir, PlacementCache, PlacementService,
+                         ServeConfig, ServeError, TransientOracleError,
+                         repair_assignment)
+from repro.sim.costsim import CostSimulator
+
+
+@pytest.fixture(scope="module")
+def agent(dlrm_pool):
+    train_ids, _ = split_pool(dlrm_pool, seed=0)
+    tasks = sample_tasks(dlrm_pool, train_ids, 12, 4, 2, seed=1)
+    return DreamShard(tasks, CostSimulator(seed=0),
+                      DreamShardConfig(n_iterations=1))
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_ms(self, ms: float) -> None:
+        self.t += ms / 1e3
+
+
+def _request(pool, ids, n_devices=4):
+    return np.array(pool[ids], dtype=np.float64), n_devices
+
+
+# ---- fault schedule ----------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(at=0, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(at=0, kind="device_loss")            # needs device=
+    with pytest.raises(ValueError):
+        FaultEvent(at=0, kind="capacity_shrink", factor=1.5)
+    with pytest.raises(ValueError):
+        FaultEvent(at=0, kind="oracle_error", count=0)
+    with pytest.raises(ValueError):
+        FaultEvent(at=0, kind="decode_spike", spike_ms=-1.0)
+
+
+def test_schedule_sorts_roundtrips_and_generates_deterministically():
+    sched = FaultSchedule((
+        FaultEvent(at=9, kind="decode_spike", spike_ms=10.0),
+        FaultEvent(at=2, kind="device_loss", device=1),
+        FaultEvent(at=5, kind="device_recovery", device=1)))
+    assert [e.at for e in sched] == [2, 5, 9]           # sorted by index
+    assert FaultSchedule.from_json(sched.to_json()) == sched
+    a = FaultSchedule.generate(seed=7, n_requests=100, n_devices=4)
+    assert a == FaultSchedule.generate(seed=7, n_requests=100, n_devices=4)
+    assert a != FaultSchedule.generate(seed=8, n_requests=100, n_devices=4)
+    losses = [e for e in a if e.kind == "device_loss"]
+    assert losses and all(25 <= e.at < 50 for e in losses)
+
+
+def test_injector_state_machine_and_checkpoint_roundtrip():
+    inj = FaultInjector(FaultSchedule((
+        FaultEvent(at=0, kind="device_loss", device=1),
+        FaultEvent(at=1, kind="oracle_error", count=2),
+        FaultEvent(at=1, kind="decode_spike", spike_ms=30.0),
+        FaultEvent(at=2, kind="device_recovery", device=1),
+        FaultEvent(at=3, kind="capacity_shrink", factor=0.5))))
+    assert [e.kind for e in inj.advance()] == ["device_loss"]
+    assert inj.degraded and inj.down == {1} and inj.epoch == 1
+    assert list(inj.allowed_mask(4)) == [True, False, True, True]
+    fired = inj.advance()
+    assert {e.kind for e in fired} == {"oracle_error", "decode_spike"}
+    assert inj.epoch == 1                       # no topology change
+    assert inj.take_error() and inj.take_error() and not inj.take_error()
+    assert inj.take_spike_ms() == 30.0 and inj.take_spike_ms() == 0.0
+    inj.advance()                               # recovery
+    assert not inj.degraded and inj.epoch == 2
+    inj.advance()                               # shrink
+    assert inj.degraded and inj.capacity_gb(8.0) == 4.0 and inj.epoch == 3
+    clone = FaultInjector(inj.schedule)
+    clone.load_state_dict(json.loads(json.dumps(inj.state_dict())))
+    assert clone.state_dict() == inj.state_dict()
+    assert inj.advance() == [] and inj.tick == 5
+
+
+def test_faulty_oracle_raises_but_legality_never_faults(dlrm_pool):
+    raw = dlrm_pool[:4]
+    a = np.array([0, 1, 2, 3])
+    inj = FaultInjector(FaultSchedule((
+        FaultEvent(at=0, kind="oracle_error", count=2),)))
+    inj.advance()
+    oracle = FaultyOracle(CostSimulator(seed=0), inj)
+    legal = oracle.legal(raw, a, 4)             # armed, but never faults
+    assert oracle.legal_batch(raw, a[None, :], 4)[0] == legal
+    with pytest.raises(TransientOracleError):
+        oracle.evaluate(raw, a, 4)
+    with pytest.raises(TransientOracleError):
+        oracle.evaluate_many(raw, a[None, :], 4)
+    assert oracle.evaluate(raw, a, 4).overall > 0      # errors drained
+
+
+def test_degraded_mesh_oracle_narrows_legality(dlrm_pool):
+    raw = np.array(dlrm_pool[:4], dtype=np.float64)
+    raw[:, F.TABLE_SIZE_GB] = 1.0
+    inner = CostSimulator(seed=0)
+    allowed = np.array([True, False, True, True])
+    oracle = DegradedMeshOracle(inner, allowed, capacity_gb=2.0)
+    A = np.array([[0, 2, 3, 0],                 # survivors only: legal
+                  [0, 1, 2, 3],                 # touches lost device 1
+                  [0, 0, 0, 2],                 # 3 GB on device 0 > 2 GB
+                  [0, 2, 3, 9]])                # out of range: illegal
+    np.testing.assert_array_equal(
+        oracle.legal_batch(raw, A, 4), [True, False, False, False])
+    assert oracle.legal(raw, A[0], 4) and not oracle.legal(raw, A[1], 4)
+    assert oracle.mem_capacity_gb == 2.0
+    # costs delegate untouched
+    assert oracle.evaluate(raw, A[0], 4).overall == \
+        inner.evaluate(raw, A[0], 4).overall
+
+
+def test_repair_assignment_moves_only_what_it_must():
+    sizes = np.array([3.0, 1.0, 2.0, 1.0])
+    allowed = np.array([True, False, True])
+    # table 1 stranded on lost device 1; headroom ties (5 GB on both
+    # survivors) break to the lowest id -> device 0.  Settled tables
+    # never move.
+    a = repair_assignment(sizes, np.array([0, 1, 2, 2]), allowed, 8.0)
+    np.testing.assert_array_equal(a, [0, 0, 2, 2])
+    # capacity shrink sheds the LARGEST table from the over-full device
+    a = repair_assignment(sizes, np.array([0, 0, 0, 0]), allowed, 4.0)
+    assert a is not None
+    assert a[0] != 0                      # 3 GB table shed first
+    loads = np.bincount(a, weights=sizes, minlength=3)
+    assert (loads <= 4.0).all() and not (a == 1).any()
+    # unplaced (-1) tables count as stranded
+    a = repair_assignment(sizes, np.full(4, -1), allowed, 8.0)
+    assert a is not None and not (a == 1).any()
+    # impossible meshes -> None, never an exception
+    assert repair_assignment(sizes, np.array([0, 1, 2, 2]),
+                             np.zeros(3, dtype=bool), 8.0) is None
+    assert repair_assignment(sizes, np.array([0, 1, 2, 2]),
+                             allowed, 0.0) is None
+    assert repair_assignment(sizes, np.full(4, -1), allowed, 2.5) is None
+
+
+# ---- cache invalidation ------------------------------------------------------
+
+def _entry(assignment) -> CacheEntry:
+    return CacheEntry(
+        placement=SimpleNamespace(assignment=np.asarray(assignment)),
+        snapshot=np.zeros((len(assignment), F.NUM_DIST_BINS)))
+
+
+def test_cache_invalidate_predicate_and_devices():
+    cache = PlacementCache(max_entries=8)
+    cache.put(b"a", _entry([0, 1, 2]))
+    cache.put(b"b", _entry([0, 2, 2]))
+    cache.put(b"c", _entry([1, 1, 1]))
+    cache.put(b"d", _entry([3, 0, 3]))
+    assert cache.get(b"a") is not None          # refresh a's LRU position
+    hits, misses = cache.hits, cache.misses
+    assert cache.invalidate_devices([1]) == 2   # a and c touch device 1
+    assert cache.invalidations == 2
+    assert cache.get(b"a") is None and cache.get(b"c") is None
+    assert cache.invalidate_devices([]) == 0
+    # survivors keep their LRU order: b is still older than d
+    assert [k for k, _ in cache.items()] == [b"b", b"d"]
+    assert cache.invalidate(lambda k, e: k == b"missing") == 0
+    assert cache.invalidate(lambda k, e: True) == 2
+    assert len(cache) == 0 and cache.invalidations == 4
+    # invalidation is not a hit or a miss (the two gets above miss)
+    assert (cache.hits, cache.misses) == (hits, misses + 2)
+
+
+# ---- typed errors ------------------------------------------------------------
+
+def test_serve_error_hierarchy_and_describe():
+    for cls, code in ((IllegalTaskError, "illegal_task"),
+                      (CapacityError, "capacity"),
+                      (DecodeTimeout, "decode_timeout"),
+                      (TransientOracleError, "transient_oracle")):
+        err = cls("boom")
+        assert isinstance(err, ServeError)
+        assert err.describe() == {"code": code, "message": "boom"}
+
+
+def test_submit_never_raises_on_malformed_requests(dlrm_pool, agent):
+    svc = PlacementService(agent, clock=FakeClock(), config=ServeConfig(
+        max_wait_ms=0.0, max_batch=1))
+    bad = [
+        (np.zeros((2, 5)), 4),                        # wrong feature width
+        (np.zeros((0, F.NUM_FEATURES)), 4),           # no tables
+        (np.full((2, F.NUM_FEATURES), np.nan), 4),    # non-finite
+        (_request(dlrm_pool, range(4))[0], 0),        # bad device count
+        (_request(dlrm_pool, range(4))[0], "two"),
+    ]
+    for raw, d in bad:
+        out = svc.submit(raw, d, tag="bad")
+        assert len(out) == 1 and out[0].source == "error"
+        assert out[0].placement is None
+        assert isinstance(out[0].error, IllegalTaskError)
+    assert svc.rejected == len(bad) and svc.typed_errors == len(bad)
+    # the service keeps serving healthy traffic afterwards
+    raw, d = _request(dlrm_pool, range(12))
+    ok = svc.submit(raw, d, tag="good")
+    assert ok[0].placement is not None and ok[0].error is None
+    assert svc.stats()["rejected"] == len(bad)
+
+
+def test_unplaceable_mesh_is_a_typed_capacity_error(dlrm_pool, agent):
+    # every device lost before the first request: nothing can be placed,
+    # but submit()/flush() still answer every ticket
+    faults = FaultInjector(FaultSchedule(tuple(
+        FaultEvent(at=0, kind="device_loss", device=d) for d in range(4))))
+    svc = PlacementService(agent, faults=faults, clock=FakeClock(),
+                           config=ServeConfig(max_wait_ms=0.0, max_batch=1))
+    raw, d = _request(dlrm_pool, range(12))
+    out = svc.submit(raw, d, tag="doomed")
+    assert len(out) == 1 and out[0].source == "error"
+    assert isinstance(out[0].error, CapacityError)
+    assert svc.typed_errors == 1 and len(svc.cache) == 0
+
+
+# ---- degraded-mode fallbacks -------------------------------------------------
+
+def test_deadline_spike_degrades_to_expert(dlrm_pool, agent):
+    faults = FaultInjector(FaultSchedule((
+        FaultEvent(at=0, kind="decode_spike", spike_ms=50.0),)))
+    svc = PlacementService(agent, faults=faults, clock=FakeClock(),
+                           config=ServeConfig(max_wait_ms=0.0, max_batch=1,
+                                              decode_deadline_ms=25.0))
+    raw, d = _request(dlrm_pool, range(12))
+    out = svc.submit(raw, d, tag="spiked")
+    assert out[0].source == "fallback" and out[0].degraded == "expert"
+    assert out[0].placement.strategy == "serve.fallback.expert"
+    assert svc.deadline_skips == 1 and svc.fallbacks["expert"] == 1
+    oracle = svc.oracle
+    assert oracle.legal(raw, out[0].placement.assignment, d)
+    # the spike was consumed: the next decode runs normally
+    raw2, _ = _request(dlrm_pool, range(10, 22))
+    assert svc.submit(raw2, d, tag="calm")[0].source == "decode"
+
+
+def test_deadline_with_empty_chain_is_decode_timeout(dlrm_pool, agent):
+    faults = FaultInjector(FaultSchedule((
+        FaultEvent(at=0, kind="decode_spike", spike_ms=50.0),)))
+    svc = PlacementService(agent, faults=faults, clock=FakeClock(),
+                           config=ServeConfig(max_wait_ms=0.0, max_batch=1,
+                                              decode_deadline_ms=25.0,
+                                              fallback_chain=()))
+    raw, d = _request(dlrm_pool, range(12))
+    out = svc.submit(raw, d, tag="spiked")
+    assert out[0].source == "error"
+    assert isinstance(out[0].error, DecodeTimeout)
+    with pytest.raises(ValueError):
+        ServeConfig(fallback_chain=("expert", "prayer"))
+
+
+def test_transient_errors_retry_with_bounded_budget(dlrm_pool, agent):
+    svc = PlacementService(agent, clock=FakeClock(),
+                           config=ServeConfig(oracle_retries=2))
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 2:
+            raise TransientOracleError("blip")
+        return "ok"
+
+    assert svc._with_retries(flaky) == "ok"
+    assert len(calls) == 2 and svc.retries == 1 and svc.retry_exhausted == 0
+
+    def always():
+        raise TransientOracleError("down")
+
+    assert svc._with_retries(always) is None
+    assert svc.retries == 1 + 3                 # 1 + (retries + 1) attempts
+    assert svc.retry_exhausted == 1
+
+
+# ---- failover re-placement ---------------------------------------------------
+
+def test_device_loss_evacuates_cache_onto_survivors(dlrm_pool, agent,
+                                                    telemetry):
+    from repro import telemetry as tele
+    lost = 1
+    faults = FaultInjector(FaultSchedule((
+        FaultEvent(at=2, kind="device_loss", device=lost),
+        FaultEvent(at=4, kind="device_recovery", device=lost))))
+    svc = PlacementService(agent, faults=faults, clock=FakeClock(),
+                           config=ServeConfig(max_wait_ms=0.0, max_batch=1,
+                                              failover_max_evals=8))
+    jobs = [_request(dlrm_pool, range(10 * i, 10 * i + 12)) for i in range(3)]
+    for i, (raw, d) in enumerate(jobs[:2]):
+        assert svc.submit(raw, d, tag=i)[0].placement is not None
+    # request 2 absorbs the loss: the sweep runs before it is served
+    out = svc.submit(*jobs[2], tag=2)
+    assert out[0].placement is not None
+    assert not (out[0].placement.assignment == lost).any()
+    for _, entry in svc.cache.items():
+        a = entry.placement.assignment
+        assert not (a == lost).any()
+        assert svc.oracle.legal(entry.raw, a, entry.placement.n_devices)
+    assert svc.fault_events["device_loss"] == 1
+    assert svc.evacuations + svc.evacuation_failures >= 1 or \
+        svc.failover_bytes_gb == 0.0            # nothing was on the device
+    counters = tele.snapshot()["counters"]
+    assert counters["serve.faults.device_loss"] == 1
+    # mid-outage hits keep serving the evacuated placement
+    again = svc.submit(*jobs[0], tag="warm")
+    assert again[0].source == "cache"
+    assert not (again[0].placement.assignment == lost).any()
+    # recovery widens the mesh again without touching the cache
+    svc.submit(*jobs[1], tag="after")
+    assert not faults.degraded and svc.fault_events["device_recovery"] == 1
+
+
+# ---- latency ledger ----------------------------------------------------------
+
+def test_latency_reservoir_quantiles_and_bound():
+    r = LatencyReservoir(capacity=256, seed=0)
+    assert r.summary() == {"count": 0, "mean_ms": None, "p50_ms": None,
+                           "p99_ms": None}
+    values = [float(v) for v in range(1, 101)]
+    for v in values:
+        r.record(v)
+    # below capacity the ledger is exact: quantiles are np.quantile
+    assert r.count == 100 and sorted(r.values()) == values
+    s = r.summary()
+    assert s["p50_ms"] == pytest.approx(np.quantile(values, 0.5))
+    assert s["p99_ms"] == pytest.approx(np.quantile(values, 0.99))
+    assert s["mean_ms"] == pytest.approx(np.mean(values))
+    # past capacity the sample stays bounded but counts the full stream
+    small = LatencyReservoir(capacity=16, seed=1)
+    for v in range(1000):
+        small.record(float(v))
+    assert small.count == 1000 and len(small.values()) == 16
+    assert small.mean == pytest.approx(np.mean(np.arange(1000.0)))
+
+
+def test_latency_reservoir_checkpoint_is_seamless():
+    a = LatencyReservoir(capacity=8, seed=3)
+    for v in range(40):
+        a.record(float(v))
+    b = LatencyReservoir(capacity=8, seed=999)
+    b.load_state_dict(json.loads(json.dumps(a.state_dict())))
+    for v in range(40, 80):
+        a.record(float(v))
+        b.record(float(v))
+    np.testing.assert_array_equal(a.values(), b.values())
+    assert a.count == b.count
+    with pytest.raises(ValueError):
+        LatencyReservoir(capacity=4).load_state_dict(a.state_dict())
+
+
+def test_service_stats_ledger_is_bounded(dlrm_pool, agent):
+    svc = PlacementService(agent, clock=FakeClock(), config=ServeConfig(
+        max_wait_ms=0.0, max_batch=1, reservoir_size=4))
+    raw, d = _request(dlrm_pool, range(12))
+    for i in range(10):
+        svc.submit(raw, d, tag=i)
+    lat = svc.stats()["latency"]
+    assert lat["count"] == 10 and len(svc.latency.values()) == 4
+
+
+# ---- warm-restart checkpoints ------------------------------------------------
+
+def _drain(svc, trace, clock, tag0=0):
+    done = []
+    for i, r in enumerate(trace):
+        clock.advance_ms(1.0)
+        done += svc.submit(r.raw_features, r.n_devices, tag=tag0 + i)
+    done += svc.flush()
+    return done
+
+
+def test_warm_restart_matches_uninterrupted_run(dlrm_pool, agent, tmp_path):
+    cfg = TrafficConfig(n_jobs=3, n_tables=12, n_devices=4, n_requests=24,
+                        drift=1.0, zipf=0.0, seed=5)
+    trace = make_trace(dlrm_pool, cfg)
+    sched = FaultSchedule((
+        FaultEvent(at=8, kind="device_loss", device=2),
+        FaultEvent(at=20, kind="device_recovery", device=2)))
+    scfg = ServeConfig(max_wait_ms=2.0, max_batch=4, drift_threshold=0.05,
+                       ewma_alpha=0.5, replace_max_evals=8,
+                       failover_max_evals=8)
+
+    clock = FakeClock()
+    base = PlacementService(agent, faults=FaultInjector(sched), clock=clock,
+                            config=scfg)
+    expect = _drain(base, trace, clock)
+
+    clock = FakeClock()
+    svc = PlacementService(agent, faults=FaultInjector(sched), clock=clock,
+                           config=scfg)
+    done = []
+    cut = 13                    # mid-outage, with requests still queued
+    for i, r in enumerate(trace[:cut]):
+        clock.advance_ms(1.0)
+        done += svc.submit(r.raw_features, r.n_devices, tag=i)
+    path = os.path.join(tmp_path, "ckpt")
+    svc.save(path)
+    restored = PlacementService.restore(path, agent=agent, config=scfg,
+                                        faults=FaultInjector(sched),
+                                        clock=clock)
+    assert restored.pending == svc.pending      # queued tickets survive
+    assert restored.faults.down == {2}
+    done += _drain(restored, trace[cut:], clock, tag0=cut)
+
+    by_tag = {r.tag: r for r in expect}
+    assert len(done) == len(expect) == len(trace)
+    for r in done:
+        ref = by_tag[r.tag]
+        assert (r.placement is None) == (ref.placement is None)
+        if r.placement is not None:
+            np.testing.assert_array_equal(r.placement.assignment,
+                                          ref.placement.assignment)
+    assert restored.stats()["fault_epoch"] == base.stats()["fault_epoch"]
+
+
+def test_checkpoint_rejects_future_state_version(tmp_path):
+    path = os.path.join(tmp_path, "state")
+    checkpoint.save_state(path, {"x": np.arange(3)}, {"meta": 1})
+    arrays, meta = checkpoint.load_state(path)
+    np.testing.assert_array_equal(arrays["x"], np.arange(3))
+    assert meta == {"meta": 1}
+    envelope = json.load(open(os.path.join(path, "state.json")))
+    envelope["state_version"] = checkpoint.STATE_VERSION + 1
+    json.dump(envelope, open(os.path.join(path, "state.json"), "w"))
+    with pytest.raises(ValueError, match="checkpoint version"):
+        checkpoint.load_state(path)
+
+
+def test_empty_schedule_matches_no_injector(dlrm_pool, agent):
+    cfg = TrafficConfig(n_jobs=2, n_tables=12, n_devices=4, n_requests=10,
+                        drift=0.5, seed=9)
+    trace = make_trace(dlrm_pool, cfg)
+    scfg = ServeConfig(max_wait_ms=0.0, max_batch=4)
+    clock = FakeClock()
+    plain = _drain(PlacementService(agent, clock=clock, config=scfg),
+                   trace, clock)
+    clock = FakeClock()
+    faulted = _drain(PlacementService(agent, faults=FaultInjector(),
+                                      clock=clock, config=scfg),
+                     trace, clock)
+    for a, b in zip(plain, faulted):
+        assert a.tag == b.tag and a.source == b.source
+        np.testing.assert_array_equal(a.placement.assignment,
+                                      b.placement.assignment)
