@@ -1,0 +1,282 @@
+"""B13: column-wise sharding -- feasibility beyond whole-table placement.
+
+PR 10 redesigns the placement API around shards: ``ShardSpec`` splits a
+table's embedding columns into K contiguous ranges on distinct devices,
+with K = 1 a bitwise-identical special case of the legacy whole-table
+path.  This benchmark measures what the redesign buys and pins what it
+must not cost:
+
+* **feasibility leg** -- a suite of tasks whose largest table exceeds
+  single-device memory (``oversize_scale`` x ``mem_capacity_gb``).
+  Every whole-table placer (the four expert heuristics + random) must
+  come back memory-illegal on every task; ``ShardingPlacer`` must
+  produce a legal column-sharded placement for all of them.  Reports
+  the legal fractions, mean shard counts, and the sharded cost vs the
+  (illegal) whole-table expert cost on the same tasks;
+* **K = 1 identity leg** -- on the unmodified (feasible) suite, the
+  trivial spec routed through ``evaluate_sharded`` / ``legal_sharded``
+  / ``sharded_placement_key`` must match ``evaluate_many`` /
+  ``legal_batch`` / ``placement_key`` bitwise, and a trivially-sharded
+  query must HIT the cache entry written by the legacy query (same
+  digest -> shared ``CachedOracle`` entry);
+* **refine leg** -- ``refine_sharded`` (shard-move search alternated
+  with split/merge spec mutations) must never return a worse placement
+  than the ``ShardingPlacer`` seed it starts from.
+
+Writes ``BENCH_sharding.json`` (committed at the repo root); the
+``check_sharding`` gate re-proves the feasibility counts, the K = 1
+identity fingerprint, and the refine monotonicity on every fresh run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common as C                             # noqa: E402
+from repro.api import (CachedOracle, ShardSpec,                 # noqa: E402
+                       ShardingPlacer, ensure_oracle, evaluate_many,
+                       evaluate_sharded, legal_batch, legal_sharded,
+                       make_baseline_placers, placement_key, refine_sharded,
+                       sharded_placement_key)
+from repro.core import features as F                           # noqa: E402
+from repro.data.tasks import Task, sample_tasks, split_pool    # noqa: E402
+from repro.search import SearchConfig                          # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# acceptance limits, committed with the baseline (the gate re-proves
+# them on every fresh run and refuses silent relaxation)
+LIMITS = {"min_sharded_legal_fraction": 1.0,
+          "max_whole_table_legal_fraction": 0.0}
+
+# fixed per-regime configs: smoke runs the quick regime at its FULL
+# config, so the check_bench gate always has comparable cells
+REGIMES = {
+    "quick": {
+        "dataset": "DLRM", "n_tasks": 6, "n_tables": 12, "n_devices": 4,
+        "oversize_scale": 2.5, "refine_max_evals": 96, "seed": 0,
+    },
+    "paper": {
+        "dataset": "DLRM", "n_tasks": 12, "n_tables": 24, "n_devices": 8,
+        "oversize_scale": 3.0, "refine_max_evals": 192, "seed": 0,
+    },
+}
+
+
+def _suites(spec: dict):
+    """(feasible, oversized) task suites drawn from the test pool.
+
+    The oversized suite clones each feasible task and inflates its
+    largest table to ``oversize_scale`` x device memory -- illegal for
+    every whole-table placement by construction."""
+    pool = C.get_pool(spec["dataset"])
+    _, test_ids = split_pool(pool, seed=0)
+    feasible = sample_tasks(pool, test_ids, spec["n_tables"],
+                            spec["n_devices"], spec["n_tasks"],
+                            seed=spec["seed"], name="shard")
+    sim = C.get_sim(spec["dataset"])
+    capacity = float(sim.spec.mem_capacity_gb)
+    oversized = []
+    for t in feasible:
+        raw = np.array(t.raw_features, dtype=np.float64)
+        big = int(np.argmax(raw[:, F.TABLE_SIZE_GB]))
+        raw[big, F.TABLE_SIZE_GB] = spec["oversize_scale"] * capacity
+        oversized.append(Task.of(raw, t.n_devices, name=t.name + "-over"))
+    return feasible, oversized, sim
+
+
+def _feasibility_leg(oracle, oversized: list[Task], spec: dict) -> dict:
+    whole = make_baseline_placers(oracle, seed=spec["seed"])
+    whole_legal = 0
+    whole_costs = []
+    for task in oversized:
+        raw = task.raw_features
+        legal_any = False
+        for placer in whole.values():
+            p = placer.place(task)
+            a = np.asarray(p.assignment, np.int64)
+            legal_any |= bool(legal_batch(oracle, raw, a[None],
+                                          task.n_devices)[0])
+        whole_legal += int(legal_any)
+        # the (illegal) expert placement is still priced: the overhead
+        # comparator for the legal sharded placement below
+        a = np.asarray(whole["size"].place(task).assignment, np.int64)
+        whole_costs.append(float(evaluate_many(oracle, raw, a[None],
+                                               task.n_devices)[0].overall))
+
+    sharder = ShardingPlacer(oracle)
+    sharded_legal = 0
+    sharded_costs, refined_costs, shard_counts = [], [], []
+    refine_cfg = SearchConfig(strategy="lns", budget_ms=None,
+                              max_evals=spec["refine_max_evals"],
+                              seed=spec["seed"])
+    for task in oversized:
+        p = sharder.place(task)
+        ok = bool(legal_sharded(oracle, task.raw_features, p.sharding,
+                                np.asarray(p.shard_assignment)[None],
+                                task.n_devices)[0])
+        sharded_legal += int(ok)
+        sharded_costs.append(float(p.est_cost_ms))
+        shard_counts.append(int(p.sharding.shard_counts.max()))
+        r = refine_sharded(oracle, task, p, refine_cfg, split_rounds=1)
+        refined_costs.append(float(r.est_cost_ms))
+    n = len(oversized)
+    return {
+        "tasks": n,
+        "whole_table_legal": whole_legal,
+        "whole_table_legal_fraction": round(whole_legal / n, 4),
+        "sharded_legal": sharded_legal,
+        "sharded_legal_fraction": round(sharded_legal / n, 4),
+        "max_shard_count_mean": round(float(np.mean(shard_counts)), 2),
+        "whole_cost_ms_mean": round(float(np.mean(whole_costs)), 4),
+        "sharded_cost_ms_mean": round(float(np.mean(sharded_costs)), 4),
+        "refined_cost_ms_mean": round(float(np.mean(refined_costs)), 4),
+        "sharded_vs_whole": round(float(np.mean(sharded_costs)
+                                        / np.mean(whole_costs)), 4),
+        "refine_regressions": sum(1 for s, r in zip(sharded_costs,
+                                                    refined_costs)
+                                  if r > s + 1e-9),
+    }
+
+
+def _identity_leg(oracle, feasible: list[Task], spec: dict) -> dict:
+    """K = 1 fingerprint: trivial-spec sharded calls reduce bitwise to
+    the legacy whole-table path -- costs, legality, digests, and shared
+    cache entries."""
+    expert = make_baseline_placers(oracle, seed=spec["seed"])["size"]
+    cost_bitwise = digest_equal = legal_equal = True
+    cache_shared = True
+    for task in feasible:
+        raw = task.raw_features
+        a = np.asarray(expert.place(task).assignment, np.int64)
+        trivial = ShardSpec.trivial(raw)
+        r_leg = evaluate_many(oracle, raw, a[None], task.n_devices)
+        r_sh = evaluate_sharded(oracle, raw, trivial, a[None],
+                                task.n_devices)
+        cost_bitwise &= (len(r_leg) == len(r_sh)) and all(
+            rl.overall == rs.overall for rl, rs in zip(r_leg, r_sh))
+        legal_equal &= (legal_batch(oracle, raw, a[None],
+                                    task.n_devices).tolist()
+                        == legal_sharded(oracle, raw, trivial, a[None],
+                                         task.n_devices).tolist())
+        digest_equal &= (placement_key(raw, a, task.n_devices)
+                         == sharded_placement_key(raw, trivial, a,
+                                                  task.n_devices))
+        # legacy query warms the cache; the trivially-sharded repeat of
+        # the SAME query must hit the same entry
+        cache = CachedOracle(oracle)
+        evaluate_many(cache, raw, a[None], task.n_devices)
+        evaluate_sharded(cache, raw, trivial, a[None], task.n_devices)
+        cache_shared &= (cache.misses, cache.hits) == (1, 1)
+    return {"tasks": len(feasible),
+            "cost_bitwise": bool(cost_bitwise),
+            "legality_equal": bool(legal_equal),
+            "digest_equal": bool(digest_equal),
+            "cache_entry_shared": bool(cache_shared)}
+
+
+def _run_regime(name: str, spec: dict) -> dict:
+    feasible, oversized, sim = _suites(spec)
+    oracle = ensure_oracle(sim)
+    t0 = time.perf_counter()
+    feas = _feasibility_leg(oracle, oversized, spec)
+    ident = _identity_leg(oracle, feasible, spec)
+    wall = time.perf_counter() - t0
+    row = {
+        "config": spec,
+        "capacity_gb": float(sim.spec.mem_capacity_gb),
+        "feasibility": feas,
+        "k1_identity": ident,
+        "oracle_evals": int(oracle.num_evaluations),
+        "wall_s": round(wall, 2),
+    }
+    print({"regime": name,
+           "whole_table_legal": feas["whole_table_legal"],
+           "sharded_legal": f"{feas['sharded_legal']}/{feas['tasks']}",
+           "sharded_vs_whole": feas["sharded_vs_whole"],
+           "k1_identity": all(v for k, v in ident.items()
+                              if k != "tasks")}, flush=True)
+    return row
+
+
+def run(smoke: bool = False, out: str | None = None,
+        regimes: list[str] | None = None):
+    selected = ["quick"] if smoke else list(REGIMES)
+    if regimes:
+        selected = [r for r in selected if r in regimes] or \
+            [r for r in REGIMES if r in regimes]
+        if not selected:
+            raise SystemExit(f"no such regime(s) {regimes}")
+
+    result = {
+        "benchmark": "b13_sharding",
+        "schema": 1,
+        "mode": "smoke" if smoke else "full",
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"cpu_count": os.cpu_count(), "numpy": np.__version__},
+        "limits": dict(LIMITS),
+        "regimes": {name: _run_regime(name, REGIMES[name])
+                    for name in selected},
+    }
+
+    head_name = "paper" if "paper" in result["regimes"] \
+        else next(iter(result["regimes"]))
+    reg = result["regimes"][head_name]
+    result["headline"] = {
+        "regime": head_name,
+        "whole_table_legal_fraction":
+            reg["feasibility"]["whole_table_legal_fraction"],
+        "sharded_legal_fraction":
+            reg["feasibility"]["sharded_legal_fraction"],
+        "sharded_vs_whole": reg["feasibility"]["sharded_vs_whole"],
+        "refined_cost_ms_mean": reg["feasibility"]["refined_cost_ms_mean"],
+        "k1_identity": all(v for k, v in reg["k1_identity"].items()
+                           if k != "tasks"),
+    }
+    if not smoke:
+        # the PR's acceptance criteria, asserted at the source
+        for name, r in result["regimes"].items():
+            f, ident = r["feasibility"], r["k1_identity"]
+            assert f["whole_table_legal_fraction"] <= \
+                LIMITS["max_whole_table_legal_fraction"], \
+                f"{name}: a whole-table placer fit an oversized table"
+            assert f["sharded_legal_fraction"] >= \
+                LIMITS["min_sharded_legal_fraction"], \
+                f"{name}: ShardingPlacer left a task memory-illegal"
+            assert f["refine_regressions"] == 0, \
+                f"{name}: refine_sharded returned a worse placement"
+            assert all(v for k, v in ident.items() if k != "tasks"), \
+                f"{name}: K=1 identity fingerprint broke: {ident}"
+    out = out or os.path.join(ROOT, "BENCH_sharding.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print({"headline": result["headline"], "written": os.path.abspath(out)},
+          flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick regime only (same config as full: the "
+                         "bench gate stays comparable)")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--regimes", default=None,
+                    help="comma-separated regime subset (quick, paper)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and export a trace on exit "
+                         "(.jsonl -> event log, else Chrome trace JSON)")
+    args = ap.parse_args()
+    from repro import telemetry as tele
+    with tele.trace_to(args.trace):
+        run(smoke=args.smoke, out=args.out,
+            regimes=args.regimes.split(",") if args.regimes else None)

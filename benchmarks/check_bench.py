@@ -362,6 +362,63 @@ def check_resilience(gate: Gate, baseline: dict, fresh: dict) -> None:
     )
 
 
+def check_sharding(gate: Gate, baseline: dict, fresh: dict) -> None:
+    """b13: the sharding acceptance criteria are host-independent
+    invariants, re-proven on the FRESH run every leg (oversized tasks
+    stay whole-table-infeasible yet shard-legal, the K = 1 identity
+    fingerprint holds bitwise, refinement never regresses); the pure-
+    numpy sharded cost is additionally pinned at the exact rtol on
+    config-matched regimes."""
+    limits = fresh.get("limits", {})
+    max_whole = limits.get("max_whole_table_legal_fraction", 0.0)
+    min_shard = limits.get("min_sharded_legal_fraction", 1.0)
+    gate.invariant(
+        "b13.fresh_has_regimes",
+        bool(fresh.get("regimes")),
+        f"fresh regimes measured: {sorted(fresh.get('regimes', {}))}",
+    )
+    for name, reg in fresh.get("regimes", {}).items():
+        f, ident = reg["feasibility"], reg["k1_identity"]
+        gate.invariant(
+            f"b13.{name}.whole_table_infeasible",
+            f["whole_table_legal_fraction"] <= max_whole,
+            f"{f['whole_table_legal']}/{f['tasks']} oversized tasks fit "
+            "a whole-table placer (expected none)",
+        )
+        gate.invariant(
+            f"b13.{name}.sharded_all_legal",
+            f["sharded_legal_fraction"] >= min_shard,
+            f"ShardingPlacer legal on {f['sharded_legal']}/{f['tasks']} "
+            f"oversized tasks (max shard count {f['max_shard_count_mean']})",
+        )
+        gate.invariant(
+            f"b13.{name}.k1_identity_bitwise",
+            all(v for k, v in ident.items() if k != "tasks"),
+            f"trivial-spec vs legacy fingerprint over {ident['tasks']} "
+            f"tasks: {ident}",
+        )
+        gate.invariant(
+            f"b13.{name}.refine_never_regresses",
+            f["refine_regressions"] == 0,
+            f"{f['refine_regressions']} refine_sharded regression(s); "
+            f"seed {f['sharded_cost_ms_mean']} ms -> refined "
+            f"{f['refined_cost_ms_mean']} ms",
+        )
+    for regime in _matched_regimes(baseline, fresh):
+        b = baseline["regimes"][regime]["feasibility"]
+        f = fresh["regimes"][regime]["feasibility"]
+        gate.exact(f"b13.{regime}.sharded_cost_ms_mean",
+                   b["sharded_cost_ms_mean"], f["sharded_cost_ms_mean"])
+        gate.exact(f"b13.{regime}.refined_cost_ms_mean",
+                   b["refined_cost_ms_mean"], f["refined_cost_ms_mean"])
+    gate.invariant(
+        "b13.limits_match_baseline",
+        baseline.get("limits") == fresh.get("limits"),
+        f"baseline limits {baseline.get('limits')} vs fresh "
+        f"{fresh.get('limits')}",
+    )
+
+
 CHECKERS = {
     "b6_train_throughput": check_train,
     "b7_oracle_throughput": check_oracle,
@@ -370,6 +427,7 @@ CHECKERS = {
     "b10_telemetry_overhead": check_telemetry,
     "b11_serve": check_serve,
     "b12_resilience": check_resilience,
+    "b13_sharding": check_sharding,
 }
 
 

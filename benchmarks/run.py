@@ -34,6 +34,7 @@ MODULES = [
     "b10_telemetry_overhead",  # telemetry off-path / enabled overhead bounds
     "b11_serve",              # placement serving: cache, admission, drift
     "b12_resilience",         # fault injection, failover, degraded serving
+    "b13_sharding",           # column-wise sharding: feasibility + K=1 identity
     "beyond_paper_ablation",  # DESIGN 4b refinements, each reverted
     "kernel_embedding_bag",   # FBGEMM-analogue kernel timing
 ]

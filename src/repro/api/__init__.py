@@ -10,6 +10,12 @@ One interface over every placement strategy and cost backend:
   `mem_capacity_gb` / `num_evaluations`; ``MeasuredOracle``
   interpolates a persisted ``repro.profiling`` calibration artifact
   (measured kernel/collective costs, zero kernel launches per call);
+* column-wise sharding (``repro.sharding``) -- ``ShardSpec`` +
+  ``shard_features`` expand tables into per-shard pseudo-tables;
+  ``evaluate_sharded`` / ``legal_sharded`` price and bound-check
+  ``(P, S)`` shard assignments on every oracle (K = 1 bitwise-equal to
+  the whole-table path); ``ShardingPlacer`` wraps any placer to split
+  oversized/hottest tables;
 * ``Placer`` (protocol) + ``Placement`` (assignment, physical
   ``PlacementPlan``, estimated cost, provenance) with adapters for
   DreamShard, the RNN baseline, expert heuristics, and random;
@@ -25,15 +31,21 @@ One interface over every placement strategy and cost backend:
   fault layer (``FaultInjector`` / ``FaultSchedule``, typed
   ``ServeError`` results, failover and warm-restart checkpoints);
 * blake2b digest helpers (``placement_key`` / ``placement_keys`` /
-  ``task_key``) shared by ``CachedOracle`` and the serving cache.
+  ``sharded_placement_key(s)`` / ``task_key``) shared by
+  ``CachedOracle`` and the serving cache.
 
 See ``docs/api.md`` for usage and the migration guide.
 """
 
-from repro.api.digest import placement_key, placement_keys, task_key
+import importlib
+
+from repro.api.digest import (placement_key, placement_keys,
+                              sharded_placement_key, sharded_placement_keys,
+                              task_key)
 from repro.api.oracle import (CachedOracle, CostOracle, KernelOracle,
                               MeasuredOracle, SimOracle, ensure_oracle,
-                              evaluate_many, legal_batch)
+                              evaluate_many, evaluate_sharded, legal_batch,
+                              legal_sharded)
 from repro.api.placement import (BasePlacer, Placement, Placer,
                                  evaluate_placements, evaluate_placer,
                                  measure_placements)
@@ -41,37 +53,55 @@ from repro.api.placers import (DreamShardPlacer, ExpertPlacer,
                                PortfolioPlacer, RNNPlacerAdapter,
                                RandomPlacer, make_baseline_placers)
 from repro.api.session import PlacementSession
+from repro.sharding import (ShardSpec, project_assignment, shard_features,
+                            shard_sizes_gb)
 
-# repro.search / repro.serve import from repro.api, so their names are
-# re-exported lazily (PEP 562) to keep `import repro.api` cycle-free
-_SEARCH_EXPORTS = ("SearchConfig", "SearchPlacer", "SearchScorer")
-_SERVE_EXPORTS = ("CapacityError", "DecodeTimeout", "FaultEvent",
-                  "FaultInjector", "FaultSchedule", "IllegalTaskError",
-                  "PlacementCache", "PlacementService", "ServeConfig",
-                  "ServeError", "ServeResult", "TransientOracleError")
+# ``repro.search`` / ``repro.serve`` / ``repro.sharding.placer`` import
+# from repro.api, so their names are re-exported lazily (PEP 562) from
+# this ONE registry to keep `import repro.api` cycle-free.  The __all__
+# consistency test pins that every lazy name resolves and is exported.
+_LAZY = {
+    # repro.search
+    "SearchConfig": "repro.search",
+    "SearchPlacer": "repro.search",
+    "SearchScorer": "repro.search",
+    # repro.serve
+    "CapacityError": "repro.serve",
+    "DecodeTimeout": "repro.serve",
+    "FaultEvent": "repro.serve",
+    "FaultInjector": "repro.serve",
+    "FaultSchedule": "repro.serve",
+    "IllegalTaskError": "repro.serve",
+    "PlacementCache": "repro.serve",
+    "PlacementService": "repro.serve",
+    "ServeConfig": "repro.serve",
+    "ServeError": "repro.serve",
+    "ServeResult": "repro.serve",
+    "TransientOracleError": "repro.serve",
+    # repro.sharding (the placer layer sits above repro.search)
+    "ShardingConfig": "repro.sharding",
+    "ShardingPlacer": "repro.sharding",
+    "refine_sharded": "repro.sharding",
+}
 
-__all__ = [
-    "BasePlacer", "CachedOracle", "CapacityError", "CostOracle",
-    "DecodeTimeout", "DreamShardPlacer", "ExpertPlacer", "FaultEvent",
-    "FaultInjector", "FaultSchedule", "IllegalTaskError", "KernelOracle",
-    "MeasuredOracle", "Placement", "PlacementCache", "PlacementService",
+__all__ = sorted([
+    "BasePlacer", "CachedOracle", "CostOracle", "DreamShardPlacer",
+    "ExpertPlacer", "KernelOracle", "MeasuredOracle", "Placement",
     "PlacementSession", "Placer", "PortfolioPlacer", "RNNPlacerAdapter",
-    "RandomPlacer", "SearchConfig", "SearchPlacer", "SearchScorer",
-    "ServeConfig", "ServeError", "ServeResult", "SimOracle",
-    "TransientOracleError", "ensure_oracle", "evaluate_many",
-    "evaluate_placements", "evaluate_placer", "legal_batch",
+    "RandomPlacer", "ShardSpec", "SimOracle", "ensure_oracle",
+    "evaluate_many", "evaluate_placements", "evaluate_placer",
+    "evaluate_sharded", "legal_batch", "legal_sharded",
     "make_baseline_placers", "measure_placements", "placement_key",
-    "placement_keys", "task_key",
-]
+    "placement_keys", "project_assignment", "shard_features",
+    "shard_sizes_gb", "sharded_placement_key", "sharded_placement_keys",
+    "task_key", *_LAZY,
+])
 
 
 def __getattr__(name: str):
-    if name in _SEARCH_EXPORTS:
-        import repro.search as _search
-        return getattr(_search, name)
-    if name in _SERVE_EXPORTS:
-        import repro.serve as _serve
-        return getattr(_serve, name)
+    module = _LAZY.get(name)
+    if module is not None:
+        return getattr(importlib.import_module(module), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

@@ -56,6 +56,33 @@ def placement_keys(raw: np.ndarray, assignments: np.ndarray,
     return keys
 
 
+def sharded_placement_key(raw: np.ndarray, spec,
+                          shard_assignment: np.ndarray,
+                          n_devices: int) -> bytes:
+    """Digest of one *(task, sharding, shard placement)* query.
+
+    Hashes the expanded per-shard feature bytes
+    (``repro.sharding.shard_features``) plus the ``(S,)`` shard
+    assignment -- so a trivial spec (K = 1 everywhere) produces the SAME
+    key as the legacy ``placement_key`` (the expansion is byte-identical
+    to ``raw``), while different split points change the expanded
+    ``dim`` / ``table_size_gb`` bytes and therefore the key.
+    """
+    from repro.sharding.spec import shard_features
+    return placement_key(shard_features(raw, spec), shard_assignment,
+                         n_devices)
+
+
+def sharded_placement_keys(raw: np.ndarray, spec,
+                           shard_assignments: np.ndarray,
+                           n_devices: int) -> list[bytes]:
+    """Row-wise ``sharded_placement_key`` over ``(P, S)`` assignments
+    (shared expanded-prefix hashing, like ``placement_keys``)."""
+    from repro.sharding.spec import shard_features
+    return placement_keys(shard_features(raw, spec), shard_assignments,
+                          n_devices)
+
+
 def task_key(raw: np.ndarray, n_devices: int, *,
              include_distribution: bool = True) -> bytes:
     """Digest of one *task* (raw features + device count) -- the

@@ -26,13 +26,13 @@ adapter accept either a ``CostOracle`` or a bare ``CostSimulator``
 from __future__ import annotations
 
 import os
-import warnings
 from typing import Protocol, runtime_checkable
 
 import numpy as np
 
 from repro import telemetry as tele
-from repro.api.digest import placement_key, placement_keys
+from repro.api.digest import (placement_key, placement_keys,
+                              sharded_placement_keys)
 from repro.core import features as F
 from repro.sim.costsim import (CostSimulator, SimResult, assignments_legal,
                                check_assignment_batch, per_device_sums)
@@ -109,6 +109,42 @@ def legal_batch(oracle, raw: np.ndarray, assignments: np.ndarray,
                              oracle.mem_capacity_gb)
 
 
+def evaluate_sharded(oracle, raw: np.ndarray, spec,
+                     assignments: np.ndarray,
+                     n_devices: int) -> list[SimResult]:
+    """Batched *shard-level* measurement through any oracle.
+
+    ``assignments`` is ``(P, S)`` over the shards of a
+    ``repro.sharding.ShardSpec``.  Uses the oracle's own
+    ``evaluate_sharded`` when it has one (shard-aware pricing:
+    the simulator's per-shard cache curve, ``MeasuredOracle``'s
+    calibrated shard model); otherwise falls back to ``evaluate_many``
+    over the expanded per-shard features -- pricing each shard as a
+    table of its column width, the generic additive-fraction model.
+    For a trivial spec every route is bitwise the whole-table
+    ``evaluate_many``.
+    """
+    assignments = check_assignment_batch(assignments, n_devices)
+    fn = getattr(oracle, "evaluate_sharded", None)
+    if fn is not None:
+        return fn(raw, spec, assignments, n_devices)
+    from repro.sharding.spec import shard_features
+    return evaluate_many(oracle, shard_features(raw, spec), assignments,
+                         n_devices)
+
+
+def legal_sharded(oracle, raw: np.ndarray, spec,
+                  assignments: np.ndarray, n_devices: int) -> np.ndarray:
+    """Vectorized ``(P,)`` memory legality of shard-level assignments:
+    per-device sums of per-shard bytes against the oracle's capacity."""
+    fn = getattr(oracle, "legal_sharded", None)
+    if fn is not None:
+        return fn(raw, spec, assignments, n_devices)
+    from repro.sharding.spec import shard_sizes_gb
+    return assignments_legal(shard_sizes_gb(raw, spec), assignments,
+                             n_devices, oracle.mem_capacity_gb)
+
+
 class SimOracle:
     """``CostOracle`` view over the analytic ``CostSimulator``.
 
@@ -149,6 +185,21 @@ class SimOracle:
     def legal_batch(self, raw, assignments, n_devices) -> np.ndarray:
         return self.sim.legal_batch(raw, assignments, n_devices)
 
+    def evaluate_sharded(self, raw, spec, assignments,
+                         n_devices) -> list[SimResult]:
+        P = len(assignments)
+        tele.count("oracle.sim.evaluate_sharded_calls")
+        tele.count("oracle.sim.rows", P)
+        with tele.span("oracle.sim.evaluate_sharded", P=P,
+                       S=spec.n_shards, n_devices=n_devices):
+            return self.sim.evaluate_sharded_batch(raw, spec, assignments,
+                                                   n_devices)
+
+    def legal_sharded(self, raw, spec, assignments,
+                      n_devices) -> np.ndarray:
+        return self.sim.legal_sharded_batch(raw, spec, assignments,
+                                            n_devices)
+
 
 class CachedOracle:
     """Memoizing wrapper: repeated placements are served from cache.
@@ -162,8 +213,15 @@ class CachedOracle:
 
     Eviction is LRU (a hit moves its entry to the back of the insertion
     order), so long greedy searches keep their hot placements cached
-    even past ``max_entries``; ``hits`` / ``misses`` / ``info()`` expose
+    even past ``max_entries``; the ``hits`` / ``misses`` counters and the
+    ``oracle.cache.*`` telemetry (``repro.telemetry.snapshot()``) expose
     the cache behaviour.
+
+    Sharded queries (``evaluate_sharded``) share the same store under
+    ``repro.api.digest.sharded_placement_keys`` -- for a trivial spec
+    those keys EQUAL the legacy whole-table keys, so K = 1 sharded
+    lookups hit entries populated by plain ``evaluate_many`` and vice
+    versa.
     """
 
     def __init__(self, inner, max_entries: int = 100_000):
@@ -233,11 +291,32 @@ class CachedOracle:
         sp = tele.span("oracle.cache.evaluate_many",
                        P=len(assignments), M=len(raw), n_devices=n_devices)
         with sp:
-            return self._evaluate_many_impl(raw, assignments, n_devices,
-                                              sp)
+            keys = self._keys_batch(raw, assignments, n_devices)
+            return self._serve_batch(
+                keys, assignments, sp,
+                lambda rows: evaluate_many(self.inner, raw, rows, n_devices))
 
-    def _evaluate_many_impl(self, raw, assignments, n_devices, sp):
-        keys = self._keys_batch(raw, assignments, n_devices)
+    def evaluate_sharded(self, raw, spec, assignments,
+                         n_devices) -> list[SimResult]:
+        """Batched shard-level evaluation through the same LRU store.
+
+        Keys come from ``sharded_placement_keys`` (hash of the expanded
+        per-shard features + shard assignment), and misses forward to the
+        inner oracle via the module-level ``evaluate_sharded`` -- so a
+        shard-aware inner backend prices misses with its own shard model
+        rather than the generic expanded-features fallback."""
+        assignments = check_assignment_batch(assignments, n_devices)
+        sp = tele.span("oracle.cache.evaluate_sharded",
+                       P=len(assignments), S=spec.n_shards,
+                       n_devices=n_devices)
+        with sp:
+            keys = sharded_placement_keys(raw, spec, assignments, n_devices)
+            return self._serve_batch(
+                keys, assignments, sp,
+                lambda rows: evaluate_sharded(self.inner, raw, spec, rows,
+                                              n_devices))
+
+    def _serve_batch(self, keys, assignments, sp, miss_fn):
         hits0, misses0 = self.hits, self.misses
         out: list[SimResult | None] = [None] * len(keys)
         miss_slot: dict[bytes, int] = {}     # key -> index into miss batch
@@ -256,8 +335,7 @@ class CachedOracle:
                 miss_slot[key] = len(miss_rows)
                 miss_rows.append(i)
         if miss_rows:
-            fresh = evaluate_many(self.inner, raw, assignments[miss_rows],
-                                  n_devices)
+            fresh = miss_fn(assignments[miss_rows])
             for key, slot in miss_slot.items():
                 self._store(key, fresh[slot])
             for i, key in enumerate(keys):
@@ -268,7 +346,7 @@ class CachedOracle:
         self.batch_misses += self.misses - misses0
         self.last_batch = {"rows": len(keys), "hits": self.hits - hits0,
                            "misses": self.misses - misses0}
-        tele.count("oracle.cache.evaluate_many_calls")
+        tele.count("oracle.cache.batched_calls")
         tele.count("oracle.cache.hits", self.hits - hits0)
         tele.count("oracle.cache.misses", self.misses - misses0)
         sp.set(hits=self.hits - hits0, misses=self.misses - misses0)
@@ -281,36 +359,24 @@ class CachedOracle:
     def legal_batch(self, raw, assignments, n_devices) -> np.ndarray:
         return legal_batch(self.inner, raw, assignments, n_devices)
 
-    def info(self) -> dict:
-        """Cache behaviour snapshot (hit rate, occupancy, policy), with
-        the batched-path split: ``batched_*`` counts only rows that went
-        through ``evaluate_many`` (``batched_hit_rate`` is the number a
-        search workload cares about -- its scoring path is all batched).
+    def legal_sharded(self, raw, spec, assignments,
+                      n_devices) -> np.ndarray:
+        return legal_sharded(self.inner, raw, spec, assignments, n_devices)
 
-        .. deprecated::
-            Prefer ``repro.telemetry.snapshot()`` -- enable telemetry
-            and read the ``oracle.cache.*`` counters, which cover every
-            cache instance in the process.  ``info()`` remains for
-            per-instance inspection but will go away once its callers
-            migrate.
-        """
-        warnings.warn(
-            "CachedOracle.info() is deprecated; enable repro.telemetry "
-            "and read the oracle.cache.* counters via "
-            "repro.telemetry.snapshot() instead",
-            DeprecationWarning, stacklevel=2)
-        total = self.hits + self.misses
-        btotal = self.batch_hits + self.batch_misses
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions,
-                "entries": len(self._cache), "max_entries": self.max_entries,
-                "hit_rate": self.hits / total if total else 0.0,
-                "batched_calls": self.batched_calls,
-                "batched_hits": self.batch_hits,
-                "batched_misses": self.batch_misses,
-                "batched_hit_rate": self.batch_hits / btotal if btotal
-                else 0.0,
-                "eviction": "lru"}
+    def __getattr__(self, name: str):
+        # ``info()`` (deprecated since the telemetry PR) is gone: the
+        # per-instance counters are plain attributes (``hits`` /
+        # ``misses`` / ``batched_calls`` / ``last_batch``) and the
+        # process-wide view lives in the telemetry ``oracle.cache.*``
+        # counters.
+        if name == "info":
+            raise AttributeError(
+                "CachedOracle.info() was removed; enable repro.telemetry "
+                "and read the oracle.cache.* counters via "
+                "repro.telemetry.snapshot() (per-instance counts remain "
+                "as the hits/misses/batched_calls attributes)")
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
 
 class MeasuredOracle:
@@ -357,7 +423,7 @@ class MeasuredOracle:
                  spec: HardwareSpec = PAPER_GPU,
                  mem_capacity_gb: float | None = None, fusion: bool = True):
         from repro.profiling.calibration import (CalibrationTable,
-                                                 FusionModel,
+                                                 FusionModel, ShardModel,
                                                  default_artifact_path)
         if table is None:
             path = default_artifact_path()
@@ -378,6 +444,13 @@ class MeasuredOracle:
         else:
             self.fusion_fwd = FusionModel.additive()
             self.fusion_bwd = FusionModel.additive()
+        # shard pricing: the v3 artifact's fitted sharded-gather models;
+        # older tables (and hand-built ones without the field) price a
+        # partial table proportionally to its column fraction
+        sf = getattr(table, "shard_fwd", None)
+        sb = getattr(table, "shard_bwd", None)
+        self.shard_fwd = sf if sf is not None else ShardModel.proportional()
+        self.shard_bwd = sb if sb is not None else ShardModel.proportional()
         self._mem_capacity_gb = (spec.mem_capacity_gb
                                  if mem_capacity_gb is None
                                  else mem_capacity_gb)
@@ -430,11 +503,47 @@ class MeasuredOracle:
                             n_devices) -> list[SimResult]:
         raw = np.asarray(raw, dtype=np.float64)
         assignments = check_assignment_batch(assignments, n_devices)
-        P, _ = assignments.shape
-        if P == 0:
+        if assignments.shape[0] == 0:
             return []
-        self._num_evaluations += P
         per_fwd, per_bwd = self.per_table_ms(raw)
+        return self._price(raw[:, F.DIM], per_fwd, per_bwd, assignments,
+                           n_devices)
+
+    def evaluate_sharded(self, raw, spec, assignments,
+                         n_devices) -> list[SimResult]:
+        """Batched shard-level pricing: each table's kernel time
+        interpolates ONCE at its full shape, then splits across its
+        shards through the calibrated ``ShardModel`` (per-gather launch
+        overhead + the column fraction of the streaming cost) -- a K-way
+        split costs MORE than K times ``1/K`` of the table, matching the
+        measured sharded-gather sweep.  Fusion and comm then price the
+        per-shard costs exactly like per-table ones.  For a trivial spec
+        the model returns the full-table times bitwise, so K = 1 results
+        equal ``evaluate_many``."""
+        P = len(assignments)
+        tele.count("oracle.measured.evaluate_sharded_calls")
+        tele.count("oracle.measured.rows", P)
+        with tele.span("oracle.measured.evaluate_sharded", P=P,
+                       S=spec.n_shards, n_devices=n_devices):
+            raw = np.asarray(raw, dtype=np.float64)
+            assignments = check_assignment_batch(assignments, n_devices)
+            if assignments.shape[0] == 0:
+                return []
+            per_fwd, per_bwd = self.per_table_ms(raw)
+            t = spec.table
+            frac = spec.widths / raw[t, F.DIM]
+            fwd = self.shard_fwd.shard_ms(per_fwd[t], frac)
+            bwd = self.shard_bwd.shard_ms(per_bwd[t], frac)
+            return self._price(spec.widths.astype(np.float64), fwd, bwd,
+                               assignments, n_devices)
+
+    def _price(self, dims, per_fwd, per_bwd, assignments,
+               n_devices) -> list[SimResult]:
+        """Fusion + comm pricing of per-item (table or shard) kernel
+        times over a validated ``(P, S)`` assignment batch; ``dims`` is
+        the per-item embedding width the all-to-all payload sums."""
+        P, _ = assignments.shape
+        self._num_evaluations += P
         # the additive fast path never touches counts -- don't pay the
         # bincount unless a fusion model will rank-sort with it
         counts = None \
@@ -444,7 +553,7 @@ class MeasuredOracle:
                                         counts)
         bwd = self.fusion_bwd.device_ms(per_bwd, assignments, n_devices,
                                         counts)
-        dim_sums = per_device_sums(assignments, n_devices, raw[:, F.DIM])
+        dim_sums = per_device_sums(assignments, n_devices, dims)
         payload_mb = (self.batch_size * dim_sums * self.spec.bytes_per_elem
                       * (n_devices - 1) / n_devices / 1e6)
         comm = self.table.comm_ms(payload_mb)
@@ -464,6 +573,12 @@ class MeasuredOracle:
         sizes = np.asarray(raw, dtype=np.float64)[:, F.TABLE_SIZE_GB]
         return assignments_legal(sizes, assignments, n_devices,
                                  self.mem_capacity_gb)
+
+    def legal_sharded(self, raw, spec, assignments,
+                      n_devices) -> np.ndarray:
+        from repro.sharding.spec import shard_sizes_gb
+        return assignments_legal(shard_sizes_gb(raw, spec), assignments,
+                                 n_devices, self.mem_capacity_gb)
 
 
 class KernelOracle:
@@ -584,3 +699,20 @@ class KernelOracle:
         sizes = np.asarray(raw, dtype=np.float64)[:, F.TABLE_SIZE_GB]
         return assignments_legal(sizes, assignments, n_devices,
                                  self.spec.mem_capacity_gb)
+
+    def evaluate_sharded(self, raw, spec, assignments,
+                         n_devices) -> list[SimResult]:
+        P = len(assignments)
+        tele.count("oracle.kernel.evaluate_sharded_calls")
+        tele.count("oracle.kernel.rows", P)
+        with tele.span("oracle.kernel.evaluate_sharded", P=P,
+                       S=spec.n_shards, n_devices=n_devices):
+            return self.measured().evaluate_sharded(raw, spec, assignments,
+                                                    n_devices)
+
+    def legal_sharded(self, raw, spec, assignments,
+                      n_devices) -> np.ndarray:
+        # like legal_batch: spec arithmetic only, no lazy calibration
+        from repro.sharding.spec import shard_sizes_gb
+        return assignments_legal(shard_sizes_gb(raw, spec), assignments,
+                                 n_devices, self.spec.mem_capacity_gb)

@@ -104,6 +104,32 @@ def make_sharded_lookup(mesh, plan: PlacementPlan, *,
         check_vma=False)
 
 
+def combine_shard_outputs(plan: PlacementPlan, grouped):
+    """Assemble per-slot pooled outputs into per-table embeddings.
+
+    ``grouped`` is ``(B, S*K, D)`` -- the layout ``make_sharded_lookup``
+    / ``lookup_unsharded`` produce, one slot per (device, k) cell.  For
+    a whole-table plan each live slot IS its table; for a column-sharded
+    plan a slot carries its shard's pooled columns in ``[0, width)`` and
+    they scatter into the owner's ``[col_start, col_end)`` range (shards
+    tile the owner's columns, so the scatter is a disjoint union).
+    Returns ``(B, M, D)`` indexed by table id -- slot bookkeeping
+    resolved, the layout a dense net consumes regardless of K.
+    """
+    order = plan.grouped_index_order()
+    out = jnp.zeros((grouped.shape[0], plan.n_tables, plan.dim),
+                    grouped.dtype)
+    cols = None if plan.slot_cols is None else plan.slot_cols.reshape(-1, 2)
+    for s in np.flatnonzero(order >= 0):
+        t = int(order[s])
+        if cols is None:
+            out = out.at[:, t, :].set(grouped[:, s, :])
+        else:
+            c0, c1 = int(cols[s, 0]), int(cols[s, 1])
+            out = out.at[:, t, c0:c1].set(grouped[:, s, :c1 - c0])
+    return out
+
+
 def lookup_unsharded(arenas, bases, indices, plan: PlacementPlan):
     """Single-device oracle with identical semantics (tests/CPU examples)."""
     outs = []

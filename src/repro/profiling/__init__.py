@@ -23,21 +23,23 @@ place.  See ``docs/api.md`` ("Measured costs & calibration").
 
 from repro.profiling.calibration import (CALIBRATION_VERSION,
                                          CalibrationTable, FusionModel,
-                                         default_artifact_path,
+                                         ShardModel, default_artifact_path,
                                          hardware_fingerprint, load_or_none)
 from repro.profiling.collectives import (CommModel, calibrate_comm,
                                          fit_alpha_beta, measure_all_to_all,
                                          synthetic_trace)
 from repro.profiling.microbench import (BenchPoint, FusedBenchPoint,
-                                        bench_fused_shape, bench_shape,
-                                        measure_placement, median_time_ms,
-                                        sweep, sweep_fused)
+                                        ShardBenchPoint, bench_fused_shape,
+                                        bench_shape, measure_placement,
+                                        median_time_ms, sweep, sweep_fused,
+                                        sweep_sharded)
 
 __all__ = [
     "BenchPoint", "CALIBRATION_VERSION", "CalibrationTable", "CommModel",
-    "FusedBenchPoint", "FusionModel", "bench_fused_shape", "bench_shape",
-    "calibrate_comm", "default_artifact_path", "fit_alpha_beta",
-    "hardware_fingerprint", "load_or_none", "measure_all_to_all",
-    "measure_placement", "median_time_ms", "sweep", "sweep_fused",
+    "FusedBenchPoint", "FusionModel", "ShardBenchPoint", "ShardModel",
+    "bench_fused_shape", "bench_shape", "calibrate_comm",
+    "default_artifact_path", "fit_alpha_beta", "hardware_fingerprint",
+    "load_or_none", "measure_all_to_all", "measure_placement",
+    "median_time_ms", "sweep", "sweep_fused", "sweep_sharded",
     "synthetic_trace",
 ]

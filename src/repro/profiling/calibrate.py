@@ -26,6 +26,10 @@ def _ints(csv: str) -> tuple[int, ...]:
     return tuple(int(x) for x in csv.split(",") if x.strip())
 
 
+def _floats(csv: str) -> tuple[float, ...]:
+    return tuple(float(x) for x in csv.split(",") if x.strip())
+
+
 def build_parser() -> argparse.ArgumentParser:
     from repro.profiling.calibration import default_artifact_path
     ap = argparse.ArgumentParser(
@@ -50,6 +54,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-fused", action="store_true",
                     help="skip the fused sweep (additive fusion model, "
                          "like a v1 artifact)")
+    ap.add_argument("--shard-fracs", type=_floats, default=None,
+                    help="column fractions for the sharded-gather sweep "
+                         "(default 0.25,0.5,0.75; 0.5 in --smoke)")
+    ap.add_argument("--shard-per-frac", type=int, default=None,
+                    help="heterogeneous draws per column fraction "
+                         "(default 3; 2 in --smoke)")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the sharded-gather sweep (proportional "
+                         "partial-table model, like a v2 artifact)")
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timing repeats per shape (default 5; 2 in --smoke)")
@@ -73,7 +86,8 @@ def _resolve_grid(args) -> dict:
             for k in ("dims", "rows", "batches", "poolings")}
 
 
-def _up_to_date(path: str, grid: dict, fused_cfg: tuple | None) -> bool:
+def _up_to_date(path: str, grid: dict, fused_cfg: tuple | None,
+                shard_cfg: tuple | None) -> bool:
     from repro.profiling.calibration import (CALIBRATION_VERSION,
                                              hardware_fingerprint,
                                              load_or_none)
@@ -90,6 +104,12 @@ def _up_to_date(path: str, grid: dict, fused_cfg: tuple | None) -> bool:
         ks, per_k = fused_cfg
         if table.meta.get("fused_ks") != [int(k) for k in ks] \
                 or table.meta.get("fused_per_k") != int(per_k):
+            return False
+    if shard_cfg is not None:
+        # same contract for the sharded-gather sweep
+        fracs, per_frac = shard_cfg
+        if table.meta.get("shard_fracs") != [float(f) for f in fracs] \
+                or table.meta.get("shard_per_frac") != int(per_frac):
             return False
     return all(np.array_equal(getattr(table, k),
                               np.asarray(grid[k], np.float64))
@@ -108,6 +128,8 @@ def _main_impl(args) -> int:
                                              CalibrationTable,
                                              DEFAULT_FUSED_KS,
                                              DEFAULT_FUSED_PER_K,
+                                             DEFAULT_SHARD_FRACS,
+                                             DEFAULT_SHARD_PER_FRAC,
                                              load_or_none)
     from repro.profiling.microbench import default_use_pallas
     grid = _resolve_grid(args)
@@ -129,20 +151,26 @@ def _main_impl(args) -> int:
     fused_per_k = args.fused_per_k or (3 if args.smoke
                                        else DEFAULT_FUSED_PER_K)
     fused_cfg = None if args.no_fused else (fused_ks, fused_per_k)
+    shard_fracs = args.shard_fracs or ((0.5,) if args.smoke
+                                       else DEFAULT_SHARD_FRACS)
+    shard_per_frac = args.shard_per_frac or (2 if args.smoke
+                                             else DEFAULT_SHARD_PER_FRAC)
+    shard_cfg = None if args.no_sharded else (shard_fracs, shard_per_frac)
 
     import warnings
-    with warnings.catch_warnings():     # a stale v1 artifact warns on load;
+    with warnings.catch_warnings():   # a stale v1/v2 artifact warns on load;
         warnings.simplefilter("ignore")  # we print our own message below
-        up_to_date = _up_to_date(args.out, grid, fused_cfg)
+        up_to_date = _up_to_date(args.out, grid, fused_cfg, shard_cfg)
         stale = None if up_to_date else load_or_none(args.out)
     if not args.force and up_to_date:
         say(f"[calibrate] {args.out} is up to date "
             "(version/fingerprint/grid match); use --force to re-measure")
         return 0
     if stale is not None and stale.version < CALIBRATION_VERSION:
+        missing = ("no fused multi-table sweep"
+                   if stale.version < 2 else "no sharded-gather sweep")
         say(f"[calibrate] {args.out} is schema v{stale.version} "
-            f"(< v{CALIBRATION_VERSION}: no fused multi-table sweep) -- "
-            "re-measuring")
+            f"(< v{CALIBRATION_VERSION}: {missing}) -- re-measuring")
 
     repeats = args.repeats if args.repeats is not None \
         else (2 if args.smoke else 5)
@@ -155,6 +183,11 @@ def _main_impl(args) -> int:
             print(f"  fused k={pt.k} dims={list(pt.dims)} "
                   f"rows={list(pt.rows)} pools={list(pt.poolings)} "
                   f"fwd={pt.fwd_ms:.4f}ms bwd={pt.bwd_ms:.4f}ms", flush=True)
+        elif hasattr(pt, "frac"):                     # ShardBenchPoint
+            print(f"  shard dim={pt.dim:<4d} width={pt.width:<4d} "
+                  f"rows={pt.rows:<7d} pool={pt.pooling:<3d} "
+                  f"fwd={pt.fwd_ms:.4f}/{pt.full_fwd_ms:.4f}ms "
+                  f"bwd={pt.bwd_ms:.4f}/{pt.full_bwd_ms:.4f}ms", flush=True)
         else:
             print(f"  dim={pt.dim:<4d} rows={pt.rows:<7d} "
                   f"batch={pt.batch:<6d} pool={pt.pooling:<3d} "
@@ -167,6 +200,8 @@ def _main_impl(args) -> int:
             **grid, use_pallas=use_pallas, warmup=args.warmup,
             repeats=repeats, seed=args.seed, fused=not args.no_fused,
             fused_ks=fused_ks, fused_per_k=fused_per_k,
+            sharded=not args.no_sharded, shard_fracs=shard_fracs,
+            shard_per_frac=shard_per_frac,
             progress=None if args.quiet else _progress,
             meta={"cli": True, "smoke": bool(args.smoke)})
     path = table.save(args.out)
@@ -174,6 +209,9 @@ def _main_impl(args) -> int:
     if not args.no_fused:
         say(f"[calibrate] fusion fwd {table.fusion_fwd.summary()}")
         say(f"[calibrate] fusion bwd {table.fusion_bwd.summary()}")
+    if not args.no_sharded:
+        say(f"[calibrate] shard fwd {table.shard_fwd.summary()}")
+        say(f"[calibrate] shard bwd {table.shard_bwd.summary()}")
     say(f"[calibrate] wrote {path} in {time.perf_counter() - t0:.1f}s")
     return 0
 

@@ -22,6 +22,14 @@ descending single-table time) instead of ``sum_i t_i``.  v1 artifacts
 (no fused sweep) still load and fall back to the additive model with a
 warning.
 
+Format v3 adds the *sharded-gather* sweep behind column-wise table
+sharding (``repro.sharding``): a ``ShardModel`` pair fitted to measured
+partial-width lookups, pricing a shard covering column fraction ``f``
+of a table as ``o + (t_full - o) * f**e`` -- the per-gather overhead
+``o`` is NOT amortized by splitting, which is why K shards cost more
+than the whole table.  v2 artifacts load with a warning and fall back
+to proportional pricing (``t_full * f``, the overhead-free model).
+
 ``CalibrationTable.synthetic`` builds a deterministic table from the
 analytic ``CostSimulator`` instead of measuring -- the bridge used by
 tests and by sim-vs-measured comparisons where hardware timing noise
@@ -41,11 +49,15 @@ import numpy as np
 from repro.profiling.collectives import CommModel, calibrate_comm
 from repro.sim.hardware import HardwareSpec, PAPER_GPU
 
-CALIBRATION_VERSION = 2
+CALIBRATION_VERSION = 3
 
 # fused-sweep defaults: fusion depths K and heterogeneous draws per K
 DEFAULT_FUSED_KS = (2, 4, 8)
 DEFAULT_FUSED_PER_K = 4
+
+# sharded-sweep defaults: column fractions and draws per fraction
+DEFAULT_SHARD_FRACS = (0.25, 0.5, 0.75)
+DEFAULT_SHARD_PER_FRAC = 3
 
 # tiny CI-friendly grid (--smoke); dims stay unpadded so CPU reference
 # timings actually differ per point (the Pallas path pads to 128 lanes)
@@ -280,6 +292,127 @@ class FusionModel:
                 f"vs additive {self.additive_mape:.3f}]")
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardModel:
+    """Parametric partial-table (column-shard) cost model, one direction.
+
+    Prices a shard that carries column fraction ``f`` of a table whose
+    full single-table calibrated time is ``t``:
+
+        shard = o + (t - o) * f ** e        (o clamped to t)
+
+    ``o`` (``overhead_ms``) is the per-gather cost a column split does
+    not shrink -- index decode, launch, per-row addressing all run at
+    the FULL lookup count whatever the width -- so K shards of one table
+    sum to ``K*o + (t - o) * sum(f_k**e)`` > ``t``: sharding buys
+    feasibility and parallelism, never free compute.  ``e``
+    (``exponent``) bends the streaming term for sub-linear column
+    scaling (cache-line quantization at narrow widths).
+
+    ``f >= 1`` returns ``t`` bitwise -- NOT via the arithmetic (in
+    floats ``o + (t - o) != t`` in general) but via an explicit
+    ``where``, which is what keeps K = 1 sharded pricing
+    bitwise-identical to the whole-table path.  ``proportional()``
+    (``o = 0, e = 1``) is the pure column-fraction model v2 artifacts
+    fall back to.
+    """
+
+    overhead_ms: float       # o: per-gather floor a split cannot shrink
+    exponent: float          # e: column-fraction exponent
+    source: str = "proportional"   # "measured"|"synthetic"|"proportional"
+    n_samples: int = 0             # sharded sweep points behind the fit
+    fit_mape: float = 0.0          # model MAPE on the sweep
+    proportional_mape: float = 0.0  # t*f baseline MAPE on the sweep
+
+    def __post_init__(self):
+        if self.overhead_ms < 0 or self.exponent <= 0:
+            raise ValueError(f"need overhead_ms >= 0 and exponent > 0, "
+                             f"got {self}")
+
+    @property
+    def is_proportional(self) -> bool:
+        """True when the model degenerates to ``t * f``."""
+        return self.overhead_ms == 0.0 and self.exponent == 1.0
+
+    @classmethod
+    def proportional(cls, source: str = "proportional") -> "ShardModel":
+        """The overhead-free model: shard cost == column fraction of the
+        table cost (the only model a pre-v3 artifact can support)."""
+        return cls(overhead_ms=0.0, exponent=1.0, source=source)
+
+    @classmethod
+    def from_spec(cls, spec: HardwareSpec = PAPER_GPU) -> "ShardModel":
+        """Analytic model matching the simulator's convention: the
+        spec's per-op overhead is the unsplittable floor, streaming cost
+        linear in columns."""
+        return cls(overhead_ms=spec.comp_overhead_ms, exponent=1.0,
+                   source="synthetic")
+
+    def shard_ms(self, full_ms, frac) -> np.ndarray:
+        """Per-shard kernel time given each shard's FULL-table time and
+        column fraction (vectorized; ``frac == 1`` returns ``full_ms``
+        bitwise)."""
+        t = np.asarray(full_ms, dtype=np.float64)
+        f = np.asarray(frac, dtype=np.float64)
+        o = np.minimum(self.overhead_ms, t)
+        pred = o + (t - o) * f ** self.exponent
+        return np.where(f < 1.0, pred, t)
+
+    @classmethod
+    def fit(cls, full_ms, fracs, measured_ms, *,
+            source: str = "measured") -> "ShardModel":
+        """Fit ``(o, e)`` to a sharded sweep.
+
+        For a fixed exponent the prediction is linear in ``o``
+        (``o * (1 - f**e) + t * f**e``), so ``o`` has a closed-form
+        relative least-squares solution and only ``e`` is grid
+        searched -- the same deterministic scheme as
+        ``FusionModel.fit``.  ``o`` is clamped to the smallest
+        full-table time seen so fitted shard costs stay within
+        ``[o, t]``.
+        """
+        t = np.asarray(full_ms, dtype=np.float64)
+        f = np.asarray(fracs, dtype=np.float64)
+        y = np.asarray(measured_ms, dtype=np.float64)
+        if y.size == 0 or t.shape != y.shape or f.shape != y.shape:
+            raise ValueError("need matching full/frac/measured arrays")
+        o_max = float(t.min())
+        prop_mape = float(np.mean(np.abs(t * f - y) / y))
+        best = None
+        # sub-linear exponents model cache-line quantization; above ~1.5
+        # the streaming term would vanish faster than columns do, which
+        # is not physical for a contiguous-row gather
+        for e in np.concatenate([[1.0], np.linspace(0.5, 1.5, 21)]):
+            g = f ** e
+            a = 1.0 - g
+            b = t * g
+            denom = ((a / y) ** 2).sum()
+            o = 0.0 if denom <= 0 else \
+                float((a * (y - b) / y ** 2).sum() / denom)
+            o = min(max(o, 0.0), o_max)
+            pred = a * o + b
+            mape = float(np.mean(np.abs(pred - y) / y))
+            if best is None or mape < best[0]:
+                best = (mape, o, float(e))
+        mape, o, e = best
+        return cls(overhead_ms=o, exponent=e, source=source,
+                   n_samples=int(y.size), fit_mape=round(mape, 6),
+                   proportional_mape=round(prop_mape, 6))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardModel":
+        return cls(**d)
+
+    def summary(self) -> str:
+        return (f"{self.source}: o={self.overhead_ms:.4f}ms "
+                f"e={self.exponent:g} [{self.n_samples} pts, "
+                f"mape {self.fit_mape:.3f} vs proportional "
+                f"{self.proportional_mape:.3f}]")
+
+
 @dataclasses.dataclass
 class CalibrationTable:
     """Measured (or synthetic) kernel/collective cost grids + provenance."""
@@ -299,12 +432,21 @@ class CalibrationTable:
     fusion_fwd: FusionModel | None = None
     fusion_bwd: FusionModel | None = None
     fusion_sweep: dict = dataclasses.field(default_factory=dict)
+    # v3: partial-table (column-shard) pricing (None -> proportional
+    # fallback) and the sharded-sweep trace behind the fit
+    shard_fwd: ShardModel | None = None
+    shard_bwd: ShardModel | None = None
+    shard_sweep: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.fusion_fwd is None:
             self.fusion_fwd = FusionModel.additive()
         if self.fusion_bwd is None:
             self.fusion_bwd = FusionModel.additive()
+        if self.shard_fwd is None:
+            self.shard_fwd = ShardModel.proportional()
+        if self.shard_bwd is None:
+            self.shard_bwd = ShardModel.proportional()
         for name in ("dims", "rows", "batches", "poolings"):
             g = np.asarray(getattr(self, name), dtype=np.float64)
             if g.ndim != 1 or g.size == 0 or np.any(np.diff(g) <= 0) \
@@ -385,9 +527,13 @@ class CalibrationTable:
                   "version": self.version,
                   "meta": self.meta,
                   "fusion": {"fwd": self.fusion_fwd.to_dict(),
-                             "bwd": self.fusion_bwd.to_dict()}}
+                             "bwd": self.fusion_bwd.to_dict()},
+                  "sharding": {"fwd": self.shard_fwd.to_dict(),
+                               "bwd": self.shard_bwd.to_dict()}}
         sweep = {f"fusion_{k}": np.asarray(v, np.float64)
                  for k, v in self.fusion_sweep.items()}
+        sweep.update({f"shard_{k}": np.asarray(v, np.float64)
+                      for k, v in self.shard_sweep.items()})
         # atomic: an interrupted calibration must not leave a truncated
         # artifact behind for the next loader
         tmp = path + ".tmp.npz"
@@ -421,8 +567,25 @@ class CalibrationTable:
                     "measure the fused correction", stacklevel=2)
                 fusion_fwd = FusionModel.additive(source="v1-fallback")
                 fusion_bwd = FusionModel.additive(source="v1-fallback")
-            sweep = {k[len("fusion_"):]: z[k] for k in z.files
-                     if k.startswith("fusion_")}
+            if "sharding" in scalar:
+                shard_fwd = ShardModel.from_dict(scalar["sharding"]["fwd"])
+                shard_bwd = ShardModel.from_dict(scalar["sharding"]["bwd"])
+            else:
+                # pre-v3 artifact: no sharded-gather sweep was measured.
+                # Whole-table pricing is unaffected; partial tables fall
+                # back to the additive column-fraction model.
+                warnings.warn(
+                    f"calibration artifact {path} is v{scalar['version']} "
+                    "(pre-sharding): partial-table costs use the "
+                    "PROPORTIONAL column-fraction model; re-run `python -m "
+                    "repro.profiling.calibrate` to measure the "
+                    "sharded-gather correction", stacklevel=2)
+                shard_fwd = ShardModel.proportional(source="v2-fallback")
+                shard_bwd = ShardModel.proportional(source="v2-fallback")
+            fusion_sweep = {k[len("fusion_"):]: z[k] for k in z.files
+                            if k.startswith("fusion_")}
+            shard_sweep = {k[len("shard_"):]: z[k] for k in z.files
+                           if k.startswith("shard_")}
             return cls(dims=z["dims"], rows=z["rows"], batches=z["batches"],
                        poolings=z["poolings"], fwd_ms=z["fwd_ms"],
                        bwd_ms=z["bwd_ms"],
@@ -430,7 +593,9 @@ class CalibrationTable:
                        fingerprint=scalar["fingerprint"],
                        version=scalar["version"], meta=scalar["meta"],
                        fusion_fwd=fusion_fwd, fusion_bwd=fusion_bwd,
-                       fusion_sweep=sweep)
+                       fusion_sweep=fusion_sweep,
+                       shard_fwd=shard_fwd, shard_bwd=shard_bwd,
+                       shard_sweep=shard_sweep)
 
     # ---- construction ------------------------------------------------------
 
@@ -441,11 +606,14 @@ class CalibrationTable:
                 spec: HardwareSpec = PAPER_GPU,
                 comm: CommModel | None = None,
                 fused: bool = True, fused_ks=None, fused_per_k: int | None = None,
+                sharded: bool = True, shard_fracs=None,
+                shard_per_frac: int | None = None,
                 progress=None, meta: dict | None = None
                 ) -> "CalibrationTable":
         """Run the full offline calibration: kernel sweep + comm fit +
-        fused multi-table sweep (``fused=False`` skips the latter and
-        leaves the additive model, like a v1 artifact)."""
+        fused multi-table sweep + sharded-gather sweep (``fused=False``
+        / ``sharded=False`` skip a sweep and leave the additive /
+        proportional fallback model, like a v1 / v2 artifact)."""
         from repro.profiling import microbench
         grid = {"dims": dims or DEFAULT_GRID["dims"],
                 "rows": rows or DEFAULT_GRID["rows"],
@@ -481,6 +649,12 @@ class CalibrationTable:
             table.calibrate_fusion(
                 ks=fused_ks or DEFAULT_FUSED_KS,
                 per_k=fused_per_k or DEFAULT_FUSED_PER_K,
+                use_pallas=use_pallas, warmup=warmup, repeats=repeats,
+                seed=seed, progress=progress)
+        if sharded:
+            table.calibrate_sharding(
+                fracs=shard_fracs or DEFAULT_SHARD_FRACS,
+                per_frac=shard_per_frac or DEFAULT_SHARD_PER_FRAC,
                 use_pallas=use_pallas, warmup=warmup, repeats=repeats,
                 seed=seed, progress=progress)
         return table
@@ -525,6 +699,45 @@ class CalibrationTable:
         self.meta = {**self.meta, "fused_ks": [int(k) for k in ks],
                      "fused_per_k": int(per_k), "fused_batch": batch}
 
+    def calibrate_sharding(self, *, fracs=DEFAULT_SHARD_FRACS,
+                           per_frac: int = DEFAULT_SHARD_PER_FRAC,
+                           use_pallas: bool | None = None, warmup: int = 1,
+                           repeats: int = 5, seed: int = 0, progress=None
+                           ) -> None:
+        """Measure the sharded-gather sweep over this table's grid and
+        fit the forward/backward ``ShardModel`` pair in place (the v3
+        field behind ``MeasuredOracle.evaluate_sharded``).
+
+        Each sweep point times one shape at a partial column width AND
+        at its full width (same index stream), so the fit sees exactly
+        the ratio the oracle will apply to interpolated full-table
+        times.
+        """
+        from repro.profiling import microbench
+        batch = int(self.batches[-1])
+        points = microbench.sweep_sharded(
+            self.dims, self.rows, self.poolings, batch, fracs=fracs,
+            per_frac=per_frac, use_pallas=use_pallas, warmup=warmup,
+            repeats=repeats, seed=seed, progress=progress)
+        frac = np.array([pt.frac for pt in points])
+        self.shard_fwd = ShardModel.fit(
+            np.array([pt.full_fwd_ms for pt in points]), frac,
+            np.array([pt.fwd_ms for pt in points]))
+        self.shard_bwd = ShardModel.fit(
+            np.array([pt.full_bwd_ms for pt in points]), frac,
+            np.array([pt.bwd_ms for pt in points]))
+        self.shard_sweep = {
+            "frac": frac,
+            "fwd_full_ms": np.array([pt.full_fwd_ms for pt in points]),
+            "fwd_ms": np.array([pt.fwd_ms for pt in points]),
+            "bwd_full_ms": np.array([pt.full_bwd_ms for pt in points]),
+            "bwd_ms": np.array([pt.bwd_ms for pt in points]),
+        }
+        self.meta = {**self.meta,
+                     "shard_fracs": [float(f) for f in fracs],
+                     "shard_per_frac": int(per_frac),
+                     "shard_batch": batch}
+
     @classmethod
     def synthetic(cls, spec: HardwareSpec = PAPER_GPU, *, dims=None,
                   rows=None, batches=None, poolings=None
@@ -567,7 +780,12 @@ class CalibrationTable:
                    # through this model reproduces fused_op_ms modulo the
                    # placement-dependent shared-cache term
                    fusion_fwd=FusionModel.from_spec(spec),
-                   fusion_bwd=FusionModel.from_spec(spec))
+                   fusion_bwd=FusionModel.from_spec(spec),
+                   # same reasoning for partial tables: the spec's c0 is
+                   # the unsplittable per-gather floor, streaming cost
+                   # proportional to columns
+                   shard_fwd=ShardModel.from_spec(spec),
+                   shard_bwd=ShardModel.from_spec(spec))
 
     def summary(self) -> str:
         n_pts = self.fwd_ms.size
@@ -581,6 +799,9 @@ class CalibrationTable:
                 f"fusion fwd {self.fusion_fwd.source}"
                 f" c0={self.fusion_fwd.overhead_ms:.4f}ms"
                 f"/bwd c0={self.fusion_bwd.overhead_ms:.4f}ms, "
+                f"shard fwd {self.shard_fwd.source}"
+                f" o={self.shard_fwd.overhead_ms:.4f}ms"
+                f"/bwd o={self.shard_bwd.overhead_ms:.4f}ms, "
                 f"hw={self.fingerprint.get('backend')}/"
                 f"{self.fingerprint.get('device_kind')}")
 

@@ -248,6 +248,75 @@ def sweep_fused(dims, rows, poolings, batch: int, *, ks=(2, 4, 8),
     return points
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardBenchPoint:
+    """One measured partial-width (column-shard) gather vs its full table.
+
+    ``frac`` is the measured column fraction ``width / dim`` (both after
+    any Pallas lane padding, so the ratio describes the shapes actually
+    timed)."""
+
+    dim: int            # full table width
+    width: int          # shard width actually timed
+    rows: int
+    batch: int
+    pooling: int
+    frac: float         # width / dim
+    fwd_ms: float       # shard gather time
+    bwd_ms: float
+    full_fwd_ms: float  # same shape at full width (the K=1 baseline)
+    full_bwd_ms: float
+
+
+def sweep_sharded(dims, rows, poolings, batch: int, *,
+                  fracs=(0.25, 0.5, 0.75), per_frac: int = 3,
+                  use_pallas: bool | None = None, warmup: int = 1,
+                  repeats: int = 5, seed: int = 0,
+                  progress=None) -> list[ShardBenchPoint]:
+    """Sharded-gather sweep: time partial-width lookups against their
+    full-width baselines.
+
+    For each column fraction, ``per_frac`` heterogeneous ``(dim, rows,
+    pooling)`` draws from the grid axes are timed twice -- once at the
+    shard width ``max(1, round(dim * frac))`` and once at the full
+    ``dim`` (a grid point, so it doubles as an interpolation sanity
+    anchor).  The pairs feed ``ShardModel.fit``: the deviation of
+    ``shard_ms / full_ms`` from ``frac`` is the per-gather overhead a
+    column split does NOT amortize (index decode, launch, row
+    addressing), which is exactly why K shards of one table cost more
+    than the whole table.  On the Pallas path both widths go through the
+    kernel's 128-lane padding, and ``frac`` reports the padded ratio.
+    """
+    rng = np.random.default_rng(seed)
+    dims = np.asarray(dims)
+    rows = np.asarray(rows)
+    poolings = np.asarray(poolings)
+    # fractions below one lane are unmeasurable on the padded kernel;
+    # only dims wide enough to split are worth drawing
+    wide = dims[dims >= 2] if (dims >= 2).any() else dims
+    points = []
+    for frac in fracs:
+        for _ in range(per_frac):
+            d = int(wide[rng.integers(0, wide.size)])
+            r = int(rows[rng.integers(0, rows.size)])
+            p = int(poolings[rng.integers(0, poolings.size)])
+            width = max(1, int(round(d * float(frac))))
+            s = int(rng.integers(0, 2**31))
+            part = bench_shape(width, r, batch, p, use_pallas=use_pallas,
+                               warmup=warmup, repeats=repeats, seed=s)
+            full = bench_shape(d, r, batch, p, use_pallas=use_pallas,
+                               warmup=warmup, repeats=repeats, seed=s)
+            pt = ShardBenchPoint(
+                dim=full.dim, width=part.dim, rows=r, batch=batch,
+                pooling=p, frac=part.dim / full.dim,
+                fwd_ms=part.fwd_ms, bwd_ms=part.bwd_ms,
+                full_fwd_ms=full.fwd_ms, full_bwd_ms=full.bwd_ms)
+            points.append(pt)
+            if progress is not None:
+                progress(pt)
+    return points
+
+
 def measure_placement(raw: np.ndarray, assignment: np.ndarray,
                       n_devices: int, *, spec: HardwareSpec = PAPER_GPU,
                       batch_size: int = 64, pooling: int | None = 4,

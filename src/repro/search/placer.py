@@ -126,9 +126,24 @@ class SearchPlacer(BasePlacer):
 
     def _refine_impl(self, task: Task, placement: Placement) -> Placement:
         cfg = self.config
-        a0 = np.asarray(placement.assignment, dtype=np.int64)
+        spec = placement.sharding
+        if spec is None:
+            a0 = np.asarray(placement.assignment, dtype=np.int64)
+            features = task.raw_features
+        else:
+            # shard rows ARE table rows over the expanded pseudo-tables:
+            # lns/evolution propose shard moves/swaps unchanged.  Beam is
+            # a whole-table MDP (the agent's cost net consumes per-table
+            # state), so it cannot refine a sharded placement.
+            if "beam" in cfg.stages():
+                raise ValueError(
+                    "strategy 'beam' is whole-table only and cannot refine "
+                    "a column-sharded placement; use 'lns'/'evolution'")
+            from repro.sharding import shard_features
+            a0 = np.asarray(placement.shard_assignment, dtype=np.int64)
+            features = shard_features(task.raw_features, spec)
         scorer = SearchScorer(self.oracle, task, budget_ms=cfg.budget_ms,
-                              max_evals=cfg.max_evals)
+                              max_evals=cfg.max_evals, sharding=spec)
         self.last_scorer = scorer
         if task.n_devices <= 1 or scorer.out_of_budget():
             return dataclasses.replace(placement, strategy=self.name)
@@ -136,9 +151,10 @@ class SearchPlacer(BasePlacer):
         # one deterministic stream per (config seed, task, seed placement):
         # same seed + same budget replays identically, and a larger
         # max_evals replays the smaller run's rounds then keeps going
+        # (for a sharded seed the digest runs over the expanded features,
+        # which for K = 1 equal the raw features bitwise)
         rng = np.random.default_rng(
-            [cfg.seed, placement_digest(task.raw_features, a0,
-                                        task.n_devices)])
+            [cfg.seed, placement_digest(features, a0, task.n_devices)])
         scorer.filter_new(a0[None])
         seed_costs, seed_results = scorer.score(a0[None])
         incumbent = S.Incumbent(assignment=a0, cost=float(seed_costs[0]),
@@ -169,7 +185,8 @@ class SearchPlacer(BasePlacer):
         return self._wrap(
             task, incumbent.assignment, est_cost_ms=incumbent.cost,
             candidates=placement.candidates + scorer.evals - 1,
-            oracle_evals=placement.oracle_evals + scorer.hardware_evals)
+            oracle_evals=placement.oracle_evals + scorer.hardware_evals,
+            sharding=spec)
 
     # ---- Placer protocol ----------------------------------------------------
 

@@ -34,20 +34,29 @@ import time
 import numpy as np
 
 from repro import telemetry as tele
-from repro.api.oracle import ensure_oracle, evaluate_many, legal_batch
+from repro.api.oracle import (ensure_oracle, evaluate_many, evaluate_sharded,
+                              legal_batch, legal_sharded)
 from repro.data.tasks import Task
 
 
 class SearchScorer:
-    """Meters one task's search budget over a ``CostOracle``."""
+    """Meters one task's search budget over a ``CostOracle``.
+
+    With a ``sharding`` (``repro.sharding.ShardSpec``) candidate rows are
+    ``(P, S)`` *shard* assignments, scored through ``evaluate_sharded`` /
+    ``legal_sharded`` instead of the whole-table paths -- the strategies
+    on top propose/dedup/adopt rows identically either way (a shard move
+    IS a table move over the expanded items).
+    """
 
     def __init__(self, oracle, task: Task,
                  budget_ms: float | None = None,
-                 max_evals: int | None = None):
+                 max_evals: int | None = None, sharding=None):
         self.oracle = ensure_oracle(oracle)
         self.task = task
         self.raw = task.raw_features
         self.n_devices = task.n_devices
+        self.sharding = sharding
         self.max_evals = max_evals
         self._deadline = (None if budget_ms is None
                           else time.perf_counter() + budget_ms / 1e3)
@@ -98,6 +107,9 @@ class SearchScorer:
 
     def legal(self, assignments: np.ndarray) -> np.ndarray:
         """Vectorized ``(P,)`` memory-legality -- free, no eval budget."""
+        if self.sharding is not None:
+            return legal_sharded(self.oracle, self.raw, self.sharding,
+                                 assignments, self.n_devices)
         return legal_batch(self.oracle, self.raw, assignments,
                            self.n_devices)
 
@@ -136,8 +148,12 @@ class SearchScorer:
         hw0 = self.oracle.num_evaluations
         with tele.span("search.score", rows=cap,
                        n_devices=self.n_devices) as sp:
-            res = evaluate_many(self.oracle, self.raw, A[:cap],
-                                self.n_devices)
+            if self.sharding is not None:
+                res = evaluate_sharded(self.oracle, self.raw, self.sharding,
+                                       A[:cap], self.n_devices)
+            else:
+                res = evaluate_many(self.oracle, self.raw, A[:cap],
+                                    self.n_devices)
             sp.set(hardware_evals=self.oracle.num_evaluations - hw0)
         self._hardware_evals += self.oracle.num_evaluations - hw0
         self.evals += cap

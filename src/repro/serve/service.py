@@ -99,6 +99,12 @@ class ServeConfig:
     ``retry_backoff_ms * 2**attempt`` sleeps (0 disables sleeping).
     Failover refinement is metered by ``failover_max_evals``; per-
     request latencies sample into a ``reservoir_size`` ledger.
+    Sharding: ``shard_oversized=True`` adds a last-resort stage on the
+    healthy mesh -- a task no whole-table layout can hold (e.g. one
+    table larger than a device's HBM) gets a column-sharded placement
+    via ``repro.sharding.ShardingPlacer`` instead of a
+    ``CapacityError``.  Off by default: the legacy serving path stays
+    bitwise.
     """
 
     max_wait_ms: float = 2.0
@@ -118,6 +124,7 @@ class ServeConfig:
     retry_backoff_ms: float = 0.0
     failover_max_evals: int | None = 64
     reservoir_size: int = 4096
+    shard_oversized: bool = False
 
     def __post_init__(self):
         for stage in self.fallback_chain:
@@ -218,6 +225,7 @@ class PlacementService:
         self.evacuation_failures = 0   # entries dropped (mesh can't hold)
         self.failover_bytes_gb = 0.0   # failover share of bytes_moved_gb
         self.fallbacks = {s: 0 for s in FALLBACK_STAGES}
+        self.shard_fallbacks = 0    # sharded last-resort placements served
         self.repairs = 0            # decode outputs re-homed onto survivors
         self.deadline_skips = 0     # flushes that skipped DreamShard
         self.decode_errors = 0      # place_many raised (served via fallback)
@@ -496,7 +504,8 @@ class PlacementService:
                     snapshot=np.array(pend.raw[:, F.DIST_START:]),
                     raw=np.array(pend.raw)))
             source = "error" if err is not None else \
-                ("fallback" if degraded in FALLBACK_STAGES else "decode")
+                ("fallback" if degraded in (*FALLBACK_STAGES, "shard")
+                 else "decode")
             if err is not None:
                 self.typed_errors += len(pend.tickets)
                 tele.count("serve.fallback.errors", len(pend.tickets))
@@ -520,6 +529,15 @@ class PlacementService:
         sizes = task.raw_features[:, F.TABLE_SIZE_GB]
         if decoded is not None:
             if not degraded_mesh:
+                if cfg.shard_oversized and not bool(assignments_legal(
+                        sizes, decoded.assignment[None], D, capacity)[0]):
+                    # no whole-table layout can hold this task (e.g. one
+                    # oversized table): opt-in column-sharded answer
+                    placement = self._shard_stage(task)
+                    if placement is not None:
+                        self.shard_fallbacks += 1
+                        tele.count("serve.fallback.shard")
+                        return placement, None, "shard"
                 return decoded, None, None       # healthy path: bitwise
             repaired = repair_assignment(sizes, decoded.assignment,
                                          allowed, capacity)
@@ -544,6 +562,12 @@ class PlacementService:
                 self.fallbacks[stage] += 1
                 tele.count(f"serve.fallback.{stage}")
                 return placement, None, stage
+        if cfg.shard_oversized and bool(allowed.all()):
+            placement = self._shard_stage(task)
+            if placement is not None:
+                self.shard_fallbacks += 1
+                tele.count("serve.fallback.shard")
+                return placement, None, "shard"
         if busted and decoded is None and not cfg.fallback_chain:
             return None, DecodeTimeout(
                 f"decode deadline {cfg.decode_deadline_ms}ms busted and "
@@ -580,6 +604,27 @@ class PlacementService:
         return Placement(assignment=np.asarray(a, dtype=np.int64),
                          plan=build_plan(task.raw_features, a, D),
                          n_devices=D, strategy=f"serve.fallback.{stage}")
+
+    def _shard_stage(self, task: Task) -> Placement | None:
+        """Opt-in last resort (``shard_oversized``): column-shard so a
+        task no whole-table layout can hold still serves.  Healthy-mesh
+        only -- sharding does not know the degraded device mask."""
+        from repro.api.oracle import legal_sharded
+        from repro.sharding import ShardingPlacer
+        try:
+            placement = ShardingPlacer(self.oracle).place(task)
+        except Exception:
+            return None
+        if placement.sharding is not None:
+            legal = bool(legal_sharded(
+                self.oracle, task.raw_features, placement.sharding,
+                placement.shard_assignment[None], task.n_devices)[0])
+        else:
+            legal = bool(assignments_legal(
+                task.raw_features[:, F.TABLE_SIZE_GB],
+                placement.assignment[None], task.n_devices,
+                self.oracle.mem_capacity_gb)[0])
+        return placement if legal else None
 
     # ---- drift ---------------------------------------------------------------
 

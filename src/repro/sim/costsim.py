@@ -276,12 +276,13 @@ class CostSimulator:
         return self._comm_ms_batch(
             np.asarray(dim_sums, dtype=np.float64)[None, :], n_devices)[0]
 
-    def _comm_ms(self, dim_sums: np.ndarray, n_devices: int) -> np.ndarray:
-        """Deprecated private alias of ``comm_ms`` (kept for old callers)."""
-        import warnings
-        warnings.warn("CostSimulator._comm_ms is deprecated; use the public "
-                      "comm_ms", DeprecationWarning, stacklevel=2)
-        return self.comm_ms(dim_sums, n_devices)
+    def __getattr__(self, name: str):
+        if name == "_comm_ms":
+            raise AttributeError(
+                "CostSimulator._comm_ms was removed; use the public "
+                "CostSimulator.comm_ms(dim_sums, n_devices) instead")
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
     def _comm_ms_batch(self, dim_sums: np.ndarray,
                        n_devices: int) -> np.ndarray:
@@ -434,6 +435,43 @@ class CostSimulator:
               n_devices: int) -> bool:
         return bool(self.legal_batch(
             raw, np.asarray(assignment)[None, :], n_devices)[0])
+
+    # ---- column-wise sharding ------------------------------------------------
+
+    def evaluate_sharded_batch(self, raw: np.ndarray, spec,
+                               assignments: np.ndarray,
+                               n_devices: int) -> list[SimResult]:
+        """Measure P *shard-level* placements: ``assignments`` is
+        ``(P, S)`` over the shards of a ``repro.sharding.ShardSpec``.
+
+        Pricing is ``evaluate_batch`` over the expanded per-shard feature
+        matrix (``shard_features``): each shard flows through the cache-hit
+        curve at its own column width, same-device sibling shards contend
+        for cache like distinct tables, and the comm payload sums shard
+        widths per device.  A trivial spec expands byte-identically to
+        ``raw``, so K = 1 sharded costs (noise digests included) are
+        bitwise the whole-table costs.
+        """
+        from repro.sharding.spec import shard_features
+        return self.evaluate_batch(shard_features(raw, spec), assignments,
+                                   n_devices)
+
+    def evaluate_sharded(self, raw: np.ndarray, spec,
+                         shard_assignment: np.ndarray,
+                         n_devices: int) -> SimResult:
+        """Single-placement view of ``evaluate_sharded_batch`` (P = 1)."""
+        return self.evaluate_sharded_batch(
+            raw, spec, np.asarray(shard_assignment)[None, :], n_devices)[0]
+
+    def legal_sharded_batch(self, raw: np.ndarray, spec,
+                            assignments: np.ndarray,
+                            n_devices: int) -> np.ndarray:
+        """Memory legality of ``(P, S)`` shard assignments: per-device
+        sums of per-shard bytes (``table_size_gb`` scaled by column
+        fraction) against capacity."""
+        from repro.sharding.spec import shard_sizes_gb
+        return assignments_legal(shard_sizes_gb(raw, spec), assignments,
+                                 n_devices, self.spec.mem_capacity_gb)
 
 
 def assignments_legal(sizes_gb: np.ndarray, assignments: np.ndarray,

@@ -100,12 +100,22 @@ def test_cached_oracle_lru_eviction_and_counters(dlrm_pool, sim, telemetry):
     assert counters["oracle.cache.misses"] == 4
 
 
-def test_cached_oracle_info_is_deprecated(sim):
-    """``info()`` survives as a deprecated alias of the counters; the
-    supported surfaces are instance counters + ``telemetry.snapshot()``."""
-    with pytest.warns(DeprecationWarning, match="telemetry"):
-        info = CachedOracle(sim).info()
-    assert info["hit_rate"] == 0.0 and info["eviction"] == "lru"
+def test_cached_oracle_info_is_removed(sim):
+    """The deprecated ``info()`` shim is gone: the supported surfaces
+    are the instance counters + ``telemetry.snapshot()``, and the error
+    says so."""
+    with pytest.raises(AttributeError, match=r"telemetry\.snapshot"):
+        CachedOracle(sim).info()
+    with pytest.raises(AttributeError, match="no attribute"):
+        CachedOracle(sim).nonexistent_attr
+
+
+def test_costsim_comm_ms_alias_is_removed():
+    """The private ``_comm_ms`` alias is gone; the error points at the
+    public ``comm_ms`` name."""
+    from repro.sim.costsim import CostSimulator
+    with pytest.raises(AttributeError, match="comm_ms"):
+        CostSimulator()._comm_ms
 
 
 def test_kernel_oracle_smoke(dlrm_pool):
@@ -340,3 +350,24 @@ def test_trainer_with_cached_oracle_collects(suite):
                                      n_rl=1))
     ds.collect()
     assert cached.hits + cached.misses == 3
+
+
+# ---- repro.api export surface ------------------------------------------------
+
+def test_api_all_exports_resolve():
+    """__all__ is sorted and deduped, every name (lazy registry
+    included) resolves, and every lazy name is both exported and
+    actually defined by its source module."""
+    import importlib
+
+    import repro.api as api
+    assert api.__all__ == sorted(set(api.__all__))
+    for name in api.__all__:
+        assert getattr(api, name) is not None, name
+    assert set(api._LAZY) <= set(api.__all__)
+    for name, module in api._LAZY.items():
+        assert getattr(importlib.import_module(module), name) \
+            is getattr(api, name), name
+    assert dir(api) == sorted(api.__all__)
+    with pytest.raises(AttributeError, match="not_a_real_export"):
+        api.not_a_real_export

